@@ -1,0 +1,65 @@
+"""Kernel hot-spot microbenchmarks.
+
+On this CPU container the Pallas kernels execute in *interpret mode* (a
+correctness harness, ~100× slower than compiled TPU code), so the numbers
+that matter for the paper's workloads are the host fast paths the engine
+actually uses here; interpret-mode figures are labelled as such.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import linreg, logreg, naive_bayes
+
+from .common import emit
+
+
+def _bench(fn, *args, reps=5, warmup=1):
+    for _ in range(warmup):
+        fn(*args)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n, d = 200_000, 10
+    X = rng.standard_normal((n, d))
+    y = rng.standard_normal(n)
+    yc = rng.integers(0, 3, n)
+    yb = (rng.random(n) > 0.5).astype(np.float64)
+
+    t = _bench(lambda: linreg.compute_stats(X, y))
+    emit("kernel_linreg_stats_host_200k", t * 1e6,
+         f"rows_per_s={n/t:.2e}")
+    t = _bench(lambda: naive_bayes.compute_gaussian_stats(X, yc, 3))
+    emit("kernel_nb_stats_host_200k", t * 1e6, f"rows_per_s={n/t:.2e}")
+    t = _bench(lambda: logreg.sgd_pass(X[:50_000], yb[:50_000]))
+    emit("kernel_logreg_sgd_host_50k", t * 1e6, f"rows_per_s={50_000/t:.2e}")
+
+    # interpret-mode Pallas (correctness harness; not a TPU timing)
+    Xs = X[:4096].astype(np.float32)
+    ys = y[:4096].astype(np.float32)
+    from repro.kernels.linreg_stats import ops as lr_ops
+
+    t = _bench(lambda: jax.block_until_ready(lr_ops.linreg_stats(Xs, ys)))
+    emit("kernel_linreg_stats_pallas_interpret_4k", t * 1e6, "mode=interpret")
+
+    # jnp fused-oracle throughput (the XLA-compiled upper bound on this host)
+    Z = jnp.asarray(np.hstack([Xs, ys[:, None]]))
+    f = jax.jit(lambda z: z.T @ z)
+    t = _bench(lambda: jax.block_until_ready(f(Z)))
+    emit("kernel_ztz_xla_host_4k", t * 1e6, f"flops_per_s={2*4096*11*11/t:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Fig 3: performance gain vs materialized-model size at fixed 50% coverage,
+for two query sizes (S1=50K, S2=100K at paper scale).  Paper: an optimum
+exists (S1 peaks near 20K for NB, 10K for logreg) and shifts right with
+query size."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import IncrementalAnalyticsEngine
+
+from .common import dataset, emit, sample_ranges, scaled, timed, warm_to_coverage
+
+MODEL_SIZES = (5_000, 10_000, 20_000, 30_000, 50_000, 70_000)
+QUERY_SIZES = {"S1": 50_000, "S2": 100_000}
+N_QUERIES = 40
+
+
+def main() -> None:
+    rng = np.random.default_rng(1)
+    be = dataset("classification", seed=1)
+    for family in ("gaussian_nb", "logreg"):
+        params = {"chunk_size": scaled(5_000)} if family == "logreg" else {}
+        for qname, qsize in QUERY_SIZES.items():
+            for msize in MODEL_SIZES:
+                eng = IncrementalAnalyticsEngine(be, materialize="never")
+                warm_to_coverage(eng, family, 0.5, scaled(msize), rng, **params)
+                queries = sample_ranges(rng, N_QUERIES, lambda: scaled(qsize), be.n_rows)
+                t_ours = t_base = 0.0
+                for q in queries:
+                    _, dt = timed(eng.query, family, q, **params)
+                    t_ours += dt
+                    _, dt0 = timed(eng.baseline, family, q, **params)
+                    t_base += dt0
+                emit(f"fig3_{family}_{qname}_msize{msize//1000}k", 0.0,
+                     f"speedup={t_base / t_ours:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

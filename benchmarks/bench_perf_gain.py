@@ -1,0 +1,67 @@
+"""Fig 2: performance gain vs coverage for LinReg / Gaussian NB / LogReg.
+
+Paper result: ≈2× at 90% coverage for linreg/NB, ≈1.8× for logreg (monoid-
+only planning forfeits subtraction strategies).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import IncrementalAnalyticsEngine
+
+from .common import dataset, emit, sample_ranges, scaled, timed, warm_to_coverage
+
+COVERAGES = (0.2, 0.4, 0.6, 0.8, 0.9)
+
+#: IO profiles: "modern" = warm disaggregated store (~10× faster than the
+#: paper's MySQL — conservative for reuse); "paperio" ≈ the paper's RDBMS
+#: cost structure (≈200K rows/s effective scan, §6.4 shows 250 ms fetches)
+PROFILES = {
+    "modern": dict(fixed_s=1e-3, rows_per_s=2e6, n_queries=60),
+    "paperio": dict(fixed_s=2e-3, rows_per_s=2e5, n_queries=24),
+}
+
+
+def run_family(family: str, kind: str, profile: str, seed: int = 0) -> dict[float, float]:
+    from repro.data.tabular import RemoteStoreBackend
+
+    prof = PROFILES[profile]
+    rng = np.random.default_rng(seed)
+    be = dataset(kind, seed, remote=False)
+    be = RemoteStoreBackend(be, fixed_s=prof["fixed_s"], rows_per_s=prof["rows_per_s"])
+    out = {}
+    params = {"chunk_size": scaled(10_000)} if family == "logreg" else {}
+    for cov in COVERAGES:
+        # logreg materializes its chunks during execution (§4 Alg 2) — that
+        # is the paper's warm-up behaviour; exact families are measured pure
+        # (store frozen after warm-up) to isolate coverage effects
+        policy = "chunks" if family == "logreg" else "never"
+        eng = IncrementalAnalyticsEngine(be, materialize=policy)
+        warm_to_coverage(eng, family, cov, scaled(50_000), rng,
+                         jitter=scaled(12_500), **params)
+        queries = sample_ranges(
+            rng, prof["n_queries"],
+            lambda: rng.normal(scaled(50_000), scaled(12_500)), be.n_rows)
+        t_ours = t_base = 0.0
+        for q in queries:
+            r, dt = timed(eng.query, family, q, **params)
+            t_ours += dt
+            r0, dt0 = timed(eng.baseline, family, q, **params)
+            t_base += dt0
+        out[cov] = t_base / t_ours
+    return out
+
+
+def main() -> None:
+    for profile in PROFILES:
+        for family, kind in (("linreg", "regression"),
+                             ("gaussian_nb", "classification"),
+                             ("logreg", "classification")):
+            gains = run_family(family, kind, profile)
+            for cov, g in gains.items():
+                emit(f"fig2_perf_gain_{family}_{profile}_cov{int(cov*100)}", 0.0,
+                     f"speedup={g:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+Per (arch × shape × mesh) cell, from ``results/dryrun/*.json``:
+
+  compute_term    = HLO_FLOPs_per_device / peak_FLOPs            [s]
+  memory_term     = HLO_bytes_per_device / HBM_bw                [s]
+  collective_term = collective_wire_bytes_per_device / link_bw   [s]
+
+(cost_analysis on the SPMD-partitioned module is per-device, so dividing by
+per-chip rates directly gives the global-formula value
+``global_qty / (chips × rate)``.)
+
+Also reports MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) — for train
+cells ×1 (fwd+bwd ≈ 3× fwd ≡ the 6ND convention); prefill uses 2·N·D;
+decode uses 2·N·D per token — and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs_global.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per ICI link
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def model_flops(rec: dict) -> float:
+    n_active = rec["model_flops_active"]
+    toks = rec["tokens"]
+    if rec["kind"] == "train":
+        return 6.0 * n_active * toks
+    return 2.0 * n_active * toks
+
+
+def analyze(rec: dict) -> dict:
+    devs = rec["devices"]
+    la = rec.get("loop_aware")
+    if la:  # trip-count-correct static analysis (see launch/hlo_analysis.py)
+        flops_dev = la["flops"]
+        bytes_dev = la["fusion_bytes"]
+        coll_dev = la["collective_bytes"]
+    else:   # raw XLA aggregates (while bodies counted once) — legacy records
+        flops_dev = rec["cost"].get("flops", 0.0)
+        bytes_dev = rec["cost"].get("bytes accessed", 0.0)
+        coll_dev = rec["collectives"]["total_bytes"]
+    compute_term = flops_dev / PEAK_FLOPS
+    memory_term = bytes_dev / HBM_BW
+    coll_term = coll_dev / LINK_BW
+    terms = {"compute": compute_term, "memory": memory_term,
+             "collective": coll_term}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_global = flops_dev * devs
+    bound = max(terms.values())
+    # roofline fraction: useful model FLOPs per chip-second at the bound
+    frac = (mf / devs / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+        "tag": rec.get("tag", ""),
+        "compute_s": compute_term,
+        "memory_s": memory_term,
+        "collective_s": coll_term,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_frac": frac,
+        "hbm_bytes_per_dev": rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"],
+    }
+
+
+def load_all(results_dir: Path = RESULTS, tag: str = "") -> list[dict]:
+    out = []
+    for fp in sorted(results_dir.glob("*.json")):
+        rec = json.loads(fp.read_text())
+        if rec.get("tag", "") != tag:
+            continue
+        out.append(analyze(rec))
+    return out
+
+
+def table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'dom':>10s} {'useful':>7s} "
+           f"{'roofline':>9s} {'HBM GB':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+            f"{r['collective_s']:10.4f} {r['dominant']:>10s} "
+            f"{r['useful_ratio']:7.3f} {r['roofline_frac']:9.3f} "
+            f"{r['hbm_bytes_per_dev']/1e9:7.1f}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rows = load_all()
+    if not rows:
+        print("roofline,0.0,no dryrun artifacts found (run repro.launch.dryrun)")
+        return
+    for r in rows:
+        print(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},0.0,"
+              f"dom={r['dominant']};frac={r['roofline_frac']:.3f};"
+              f"useful={r['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

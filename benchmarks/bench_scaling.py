@@ -1,0 +1,46 @@
+"""Fig 4: absolute query time for small/large queries across materialized-
+model size regimes M1..M4, as coverage grows.  Paper: small queries benefit
+once big models can be *subtracted* (≥70% coverage for M3/M4); large queries
+always find useful building blocks."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import IncrementalAnalyticsEngine
+
+from .common import dataset, emit, sample_ranges, scaled, timed, warm_to_coverage
+
+REGIMES = {
+    "M1": (25_000, 50_000),
+    "M2": (75_000, 100_000),
+    "M3": (150_000, 200_000),
+    "M4": (250_000, 500_000),
+}
+QUERIES = {"small": (50_000, 100_000), "large": (500_000, 750_000)}
+COVERAGES = (0.3, 0.5, 0.7, 0.9)
+N_QUERIES = 25
+
+
+def main() -> None:
+    rng = np.random.default_rng(2)
+    be = dataset("classification", seed=2)
+    for reg, (mlo, mhi) in REGIMES.items():
+        for cov in COVERAGES:
+            eng = IncrementalAnalyticsEngine(be, materialize="never")
+            mean = scaled((mlo + mhi) / 2)
+            warm_to_coverage(eng, "gaussian_nb", cov, mean, rng,
+                             jitter=scaled((mhi - mlo) / 4))
+            for qname, (qlo, qhi) in QUERIES.items():
+                queries = sample_ranges(
+                    rng, N_QUERIES,
+                    lambda: rng.uniform(scaled(qlo), scaled(qhi)), be.n_rows)
+                total = 0.0
+                for q in queries:
+                    _, dt = timed(eng.query, "gaussian_nb", q)
+                    total += dt
+                emit(f"fig4_{reg}_{qname}_cov{int(cov*100)}",
+                     total / N_QUERIES * 1e6, f"mean_query_s={total/N_QUERIES:.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Beyond-paper: the paper's reuse machinery applied to LM serving.
+
+Measures prefix-cache construction time with descriptor-planned segment
+reuse vs from-scratch prefill, on a reduced backbone (CPU-scale), across
+coverage levels — the serving analogue of Fig 2.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from .common import emit
+
+
+def main() -> None:
+    from repro.configs import ARCHS, reduced
+    from repro.models.lm import LM
+    from repro.serve.engine import ServeEngine
+
+    cfg = reduced(ARCHS["deepseek-67b"])
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    doc = np.random.default_rng(0).integers(0, cfg.vocab_size, 2048).astype(np.int32)
+
+    eng = ServeEngine(model, params, doc, chunk_tokens=128)
+    # warm pass (also pays all jit compiles)
+    t0 = time.perf_counter()
+    eng.build_prefix(1024)
+    t_cold = time.perf_counter() - t0
+
+    # steady-state: repeated/extended requests hit cached segments
+    reqs = [1024, 1536, 1280, 2047, 1792]
+    t_warm_total = 0.0
+    for L in reqs:
+        t0 = time.perf_counter()
+        eng.build_prefix(L)
+        t_warm_total += time.perf_counter() - t0
+    t_warm = t_warm_total / len(reqs)
+
+    # from-scratch reference for the same requests (jit already warm)
+    t_base_total = 0.0
+    for L in reqs:
+        _, dt = eng.baseline_build(L)
+        t_base_total += dt
+    t_base = t_base_total / len(reqs)
+
+    emit("serve_prefix_reuse", t_warm * 1e6,
+         f"speedup_vs_scratch={t_base / t_warm:.2f}x;"
+         f"reuse_frac={eng.stats.reuse_frac:.2f};"
+         f"store_segments={len(eng.store)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Shared benchmark scaffolding mirroring §6's experimental setup."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.cost import CostModel, calibrate
+from repro.core.descriptors import Range, coalesce
+from repro.core.engine import IncrementalAnalyticsEngine
+from repro.data.synthetic import make_classification, make_regression
+from repro.data.tabular import ArrayBackend, RemoteStoreBackend
+
+#: benchmark scale (paper: 5M × 10; scaled to CPU-minutes while keeping all
+#: ratios — query/model sizes scale with the data set)
+N_POINTS = 1_000_000
+DIM = 10
+SCALE = N_POINTS / 5_000_000  # paper-relative scale factor
+
+
+def dataset(kind: str, seed: int = 0, *, remote: bool = True):
+    """Benchmark backend.  ``remote=True`` wraps the in-memory store in a
+    disaggregated-storage cost model (per-request latency + bounded scan
+    rate) — the deployment the planner optimizes for; see DESIGN.md §2."""
+    if kind == "regression":
+        X, y = make_regression(N_POINTS, d=DIM, seed=seed)
+    else:
+        X, y = make_classification(N_POINTS, d=DIM, n_classes=2, seed=seed)
+    be = ArrayBackend(X, y)
+    return RemoteStoreBackend(be) if remote else be
+
+
+def scaled(n: float) -> int:
+    """Translate a paper-scale size (on 5M points) to this run's scale."""
+    return max(int(n * SCALE), 500)
+
+
+def sample_ranges(rng, n_ranges, size_sampler, n_total) -> list[Range]:
+    out = []
+    for _ in range(n_ranges):
+        size = max(int(size_sampler()), 100)
+        size = min(size, n_total - 1)
+        lo = int(rng.integers(0, n_total - size))
+        out.append(Range(lo, lo + size))
+    return out
+
+
+def warm_to_coverage(eng: IncrementalAnalyticsEngine, family: str, coverage: float,
+                     model_size: float, rng, jitter: float = 0.0, **params):
+    """Materialize models until ≈``coverage`` of the data set is covered."""
+    n = eng.backend.n_rows
+    ranges: list[Range] = []
+    guard = 0
+    while True:
+        cov = sum(r.size for r in coalesce(ranges)) / n
+        if cov >= coverage or guard > 10_000:
+            break
+        size = int(model_size + (rng.normal() * jitter if jitter else 0))
+        size = int(np.clip(size, 200, n // 2))
+        lo = int(rng.integers(0, n - size))
+        ranges.append(Range(lo, lo + size))
+        guard += 1
+    eng.warm(family, ranges, **params)
+    return eng.coverage(family)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,45 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Modules scale the paper's 5M-row
+setting to CPU-minutes while preserving every size ratio (see common.py).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.bench_perf_gain",   # Fig 2
+    "benchmarks.bench_storage",     # Table 1
+    "benchmarks.bench_model_size",  # Fig 3
+    "benchmarks.bench_scaling",     # Fig 4
+    "benchmarks.bench_breakdown",   # Fig 5
+    "benchmarks.bench_accuracy",    # Fig 6/7
+    "benchmarks.bench_kernels",     # kernel hot spots
+    "benchmarks.bench_roofline",    # §Roofline reader (dry-run artifacts)
+    "benchmarks.bench_serve_reuse", # serving prefix-reuse (beyond-paper)
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    failures = 0
+    for mod_name in MODULES:
+        if only and not any(o in mod_name for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+            print(f"# {mod_name} done in {time.time()-t0:.1f}s")
+        except Exception:
+            failures += 1
+            print(f"# {mod_name} FAILED")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Serve a small model with batched requests, reusing KV-cache segments via
+the paper's descriptor planner (the inference instance of incremental model
+reuse).
+
+    PYTHONPATH=src python examples/serve_prefix_reuse.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.models.lm import LM
+from repro.serve.engine import ServeEngine
+
+cfg = reduced(ARCHS["deepseek-67b"])
+model = LM(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+rng = np.random.default_rng(0)
+doc = rng.integers(0, cfg.vocab_size, 2048).astype(np.int32)  # shared context
+
+eng = ServeEngine(model, params, doc, chunk_tokens=128)
+
+requests = [(512, 8), (1024, 8), (768, 8), (2000, 8), (1024, 8)]
+for i, (prefix, n_new) in enumerate(requests):
+    toks, plan = eng.generate(prefix, n_new, greedy=False, seed=i)
+    print(f"request {i}: prefix={prefix:5d}  cached-segments used "
+          f"{len(plan.models_used):2d}  generated {toks}")
+
+s = eng.stats
+print(f"\nreuse fraction {s.reuse_frac:.1%}  "
+      f"({s.tokens_reused} tokens reused, {s.tokens_computed} computed)")
+print(f"planner total {s.planner_s*1e3:.1f} ms — negligible vs prefill "
+      f"{s.prefill_s:.2f}s (the paper's §6.4 result, at serving time)")
+assert s.reuse_frac > 0.3

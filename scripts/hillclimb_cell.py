@@ -1,0 +1,55 @@
+"""Hillclimb instrument: compile one cell (with overrides) and print the
+roofline terms + top contributors per metric."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse, json, sys, time
+import jax
+
+sys.path.insert(0, "src")
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--compress-pod", action="store_true")
+    ap.add_argument("--overrides", default="")
+    ap.add_argument("--rules-overrides", default="")
+    ap.add_argument("--tag", default="probe")
+    ap.add_argument("--top", type=int, default=10)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import build_cell
+    from repro.launch.hlo_analysis import HloCostModel
+
+    overrides = json.loads(args.overrides) if args.overrides else None
+    rov = json.loads(args.rules_overrides) if args.rules_overrides else None
+    fn, fargs, mesh, rules, bundle, shape = build_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod, overrides=overrides,
+        compress_pod=args.compress_pod, rules_overrides=rov)
+    t0 = time.time()
+    with mesh:
+        compiled = jax.jit(fn).lower(*fargs).compile()
+    mem = compiled.memory_analysis()
+    txt = compiled.as_text()
+    cm = HloCostModel(txt)
+    c = cm.cost()
+    PEAK, HBM, LINK = 197e12, 819e9, 50e9
+    terms = dict(compute=c.flops/PEAK, memory=c.fusion_bytes/HBM, collective=c.coll_bytes/LINK)
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = (6.0 if shape.kind == "train" else 2.0) * bundle.cfg.n_params_active_estimate * toks
+    ideal = mf / mesh.devices.size / PEAK
+    print(f"\n=== {args.arch} {args.shape} {'multi' if args.multi_pod else 'single'} tag={args.tag} "
+          f"(compile {time.time()-t0:.0f}s) ===")
+    print(f"terms: compute {terms['compute']:.3f}s  memory {terms['memory']:.3f}s  "
+          f"collective {terms['collective']:.3f}s  | ideal-compute {ideal:.3f}s  "
+          f"roofline-frac {ideal/max(terms.values()):.3f}")
+    print(f"temp/dev {mem.temp_size_in_bytes/1e9:.2f} GB  args/dev {mem.argument_size_in_bytes/1e9:.2f} GB")
+    for metric in ("hbm", "coll", "flops"):
+        print(f"\ntop {metric}:")
+        for val, op, shp, label, m in cm.top_contributors(args.top, metric):
+            unit = "GB" if metric != "flops" else "GF"
+            print(f"  {val/1e9:12.1f} {unit}  x{m:9.0f}  {op:12s} {shp:28s} {label}")
+
+if __name__ == "__main__":
+    main()

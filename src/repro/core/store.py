@@ -1,0 +1,156 @@
+"""Materialized-model store: descriptors + sufficient statistics + persistence.
+
+Storage cost is the paper's explicit trade-off (Table 1) — the store tracks
+bytes per family and supports an LRU byte budget.  Persistence is a plain
+``npz`` per model plus a JSON manifest so a store survives process restarts
+(and, at cluster scale, host replacement: the manifest carries content
+hashes for integrity).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Iterator, Optional
+
+import numpy as np
+
+from .descriptors import DescriptorIndex, Range
+from .suffstats import STATS_FAMILIES, Combinable
+
+
+@dataclass
+class StoredModel:
+    model_id: str
+    family: str
+    rng: Range
+    stats: Combinable
+    created_s: float = field(default_factory=time.time)
+    last_used_s: float = field(default_factory=time.time)
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def nbytes(self) -> int:
+        return self.stats.nbytes
+
+
+class ModelStore:
+    """Per-family materialized models, indexed for Alg 3/4."""
+
+    def __init__(self, byte_budget: Optional[int] = None) -> None:
+        self._models: dict[str, StoredModel] = {}
+        self._indexes: dict[str, DescriptorIndex] = {}
+        self._seq = 0
+        self.byte_budget = byte_budget
+        self.evictions = 0
+
+    # -- crud --------------------------------------------------------------
+    def put(self, family: str, rng: Range, stats: Combinable, meta: dict | None = None,
+            model_id: str | None = None) -> str:
+        if family not in STATS_FAMILIES:
+            raise KeyError(f"unknown family {family!r}")
+        if model_id is None:
+            self._seq += 1
+            model_id = f"{family}:{rng.lo}-{rng.hi}#{self._seq}"
+        sm = StoredModel(model_id=model_id, family=family, rng=rng,
+                         stats=stats.to_numpy(), meta=meta or {})
+        self._models[model_id] = sm
+        self.index(family).add(model_id, rng)
+        self._maybe_evict()
+        return model_id
+
+    def get(self, model_id: str) -> StoredModel:
+        sm = self._models[model_id]
+        sm.last_used_s = time.time()
+        return sm
+
+    def drop(self, model_id: str) -> None:
+        sm = self._models.pop(model_id)
+        self.index(sm.family).remove(model_id)
+
+    def index(self, family: str) -> DescriptorIndex:
+        if family not in self._indexes:
+            self._indexes[family] = DescriptorIndex()
+        return self._indexes[family]
+
+    def models(self, family: str | None = None) -> Iterator[StoredModel]:
+        for sm in self._models.values():
+            if family is None or sm.family == family:
+                yield sm
+
+    def __len__(self) -> int:
+        return len(self._models)
+
+    # -- accounting ----------------------------------------------------------
+    def nbytes(self, family: str | None = None) -> int:
+        return sum(sm.nbytes for sm in self.models(family))
+
+    def model_bytes(self, family: str) -> dict[str, int]:
+        return {sm.model_id: sm.nbytes for sm in self.models(family)}
+
+    def coverage(self, family: str, universe: Range) -> float:
+        return self.index(family).coverage(universe)
+
+    def _maybe_evict(self) -> None:
+        if self.byte_budget is None:
+            return
+        while self.nbytes() > self.byte_budget and len(self._models) > 1:
+            victim = min(self._models.values(), key=lambda sm: sm.last_used_s)
+            self.drop(victim.model_id)
+            self.evictions += 1
+
+    # -- persistence -----------------------------------------------------------
+    def save(self, path: str | Path) -> None:
+        root = Path(path)
+        root.mkdir(parents=True, exist_ok=True)
+        manifest: dict[str, Any] = {"version": 1, "models": []}
+        for i, sm in enumerate(self._models.values()):
+            import jax
+
+            leaves, treedef = jax.tree_util.tree_flatten(sm.stats)
+            fname = f"model_{i:06d}.npz"
+            arrays = {f"leaf_{j}": np.asarray(x) for j, x in enumerate(leaves)}
+            fpath = root / fname
+            np.savez(fpath, **arrays)
+            digest = hashlib.sha256(fpath.read_bytes()).hexdigest()
+            manifest["models"].append(
+                {
+                    "model_id": sm.model_id,
+                    "family": sm.family,
+                    "lo": sm.rng.lo,
+                    "hi": sm.rng.hi,
+                    "file": fname,
+                    "sha256": digest,
+                    "n_leaves": len(leaves),
+                    "meta": sm.meta,
+                }
+            )
+        (root / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
+
+    @classmethod
+    def load(cls, path: str | Path, byte_budget: Optional[int] = None,
+             verify: bool = True) -> "ModelStore":
+        import jax
+
+        root = Path(path)
+        manifest = json.loads((root / "MANIFEST.json").read_text())
+        store = cls(byte_budget=byte_budget)
+        for ent in manifest["models"]:
+            fpath = root / ent["file"]
+            if verify:
+                digest = hashlib.sha256(fpath.read_bytes()).hexdigest()
+                if digest != ent["sha256"]:
+                    raise IOError(f"checksum mismatch for {ent['file']}")
+            data = np.load(fpath)
+            leaves = [data[f"leaf_{j}"] for j in range(ent["n_leaves"])]
+            proto = STATS_FAMILIES[ent["family"]]
+            # rebuild via treedef of a zero instance with matching structure
+            import dataclasses as dc
+
+            fields = [f.name for f in dc.fields(proto)]
+            stats = proto(**dict(zip(fields, leaves)))
+            store.put(ent["family"], Range(ent["lo"], ent["hi"]), stats,
+                      meta=ent.get("meta", {}), model_id=ent["model_id"])
+        return store

@@ -1,0 +1,9 @@
+from .sharding import (
+    ShardingRules,
+    constrain,
+    make_rules,
+    param_pspecs,
+    use_rules,
+)
+
+__all__ = ["ShardingRules", "constrain", "make_rules", "param_pspecs", "use_rules"]

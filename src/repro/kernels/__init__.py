@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+The 2015 prototype's model-construction inner loops — rank-k sufficient-
+statistic updates, per-class grouped reductions, chunked SGD — are exactly
+the shapes the TPU MXU wants.  Each kernel ships as:
+
+  ``<name>/kernel.py``  pl.pallas_call + explicit BlockSpec VMEM tiling
+  ``<name>/ops.py``     jit'd public wrapper (padding, interpret fallback)
+  ``<name>/ref.py``     pure-jnp oracle used by the test sweeps
+"""
+from . import extend_attention, linreg_stats, logreg_sgd, nb_stats  # noqa: F401
+
+__all__ = ["extend_attention", "linreg_stats", "logreg_sgd", "nb_stats"]

@@ -1,0 +1,26 @@
+"""Shared kernel utilities: padding, interpret-mode detection."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_axis(x, axis: int, target: int, value=0.0):
+    """Zero-pad ``x`` along ``axis`` up to length ``target``."""
+    import jax.numpy as jnp
+
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - cur)
+    return jnp.pad(x, pads, constant_values=value)

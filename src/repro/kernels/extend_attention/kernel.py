@@ -1,0 +1,78 @@
+"""Suffix (extend) attention — the compute inside incremental prefix
+construction (serve engine's ``prefill_extend`` gap-filler).
+
+The serving engine realizes the paper's reuse plan by *extending* a cached
+prefix with an uncovered chunk: the chunk's q rows attend over
+[cached prefix ‖ new chunk].  On TPU that inner loop is this kernel:
+
+  * one grid step = one (batch·head) stream — maps onto the mesh's
+    data/model axes at the distribution layer;
+  * the q chunk (≤512×hd) is pinned in VMEM; the KV stream is walked in
+    ``chunk``-sized VMEM tiles with online softmax (m, l, acc carries in
+    registers/VMEM — nothing quadratic is ever materialized);
+  * the causal boundary only affects the trailing ``nb`` positions, so all
+    fully-cached tiles run mask-free on the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, t_real: int, chunk: int):
+    nb, hd = q_ref.shape[1], q_ref.shape[2]
+    t_pad = k_ref.shape[1]
+    n_chunks = t_pad // chunk
+
+    q = q_ref[0].astype(jnp.float32) * (hd ** -0.5)      # (nb, hd) in VMEM
+    q_pos = (t_real - nb) + jax.lax.broadcasted_iota(jnp.int32, (nb, chunk), 0)
+
+    def body(i, carry):
+        m, l, acc = carry
+        kc = k_ref[0, pl.dslice(i * chunk, chunk), :].astype(jnp.float32)
+        vc = v_ref[0, pl.dslice(i * chunk, chunk), :].astype(jnp.float32)
+        sc = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (nb, chunk)
+        k_pos = i * chunk + jax.lax.broadcasted_iota(jnp.int32, (nb, chunk), 1)
+        valid = (k_pos <= q_pos) & (k_pos < t_real)
+        sc = jnp.where(valid, sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jax.lax.dot_general(p, vc, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc * corr[:, None] + pv)
+
+    m0 = jnp.full((nb,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nb,), jnp.float32)
+    a0 = jnp.zeros((nb, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("t_real", "chunk", "interpret"))
+def extend_attention_streams(q, k, v, *, t_real: int, chunk: int = 512,
+                             interpret: bool = False):
+    """Per-stream suffix attention.  q (S, nb, hd); k/v (S, T_pad, hd)."""
+    s, nb, hd = q.shape
+    t_pad = k.shape[1]
+    assert t_pad % chunk == 0, (t_pad, chunk)
+    kern = functools.partial(_kernel, t_real=t_real, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(s,),
+        in_specs=[
+            pl.BlockSpec((1, nb, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t_pad, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t_pad, hd), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nb, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, nb, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,32 @@
+"""Public wrapper: (B, nb, H, hd) suffix attention over (B, T, H, hd) KV."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_axis, round_up, use_interpret
+
+from .kernel import extend_attention_streams
+
+
+def extend_attention(q, k, v, *, chunk: int = 512):
+    """Causal suffix attention (see ref.py for semantics).
+
+    Flattens (batch, head) into kernel grid streams, pads the KV length to
+    a chunk multiple (masked inside the kernel).
+    """
+    q = jnp.asarray(q)
+    k = jnp.asarray(k)
+    v = jnp.asarray(v)
+    b, nb, h, hd = q.shape
+    t = k.shape[1]
+    # (B, nb, H, hd) → (B·H, nb, hd)
+    qs = q.transpose(0, 2, 1, 3).reshape(b * h, nb, hd)
+    ks = k.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+    vs = v.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+    chunk = min(chunk, round_up(t, 8))
+    t_pad = round_up(t, chunk)
+    ks = pad_axis(ks, 1, t_pad)
+    vs = pad_axis(vs, 1, t_pad)
+    out = extend_attention_streams(qs, ks, vs, t_real=t, chunk=chunk,
+                                   interpret=use_interpret())
+    return out.reshape(b, h, nb, hd).transpose(0, 2, 1, 3)

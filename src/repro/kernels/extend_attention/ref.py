@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the suffix (extend) attention kernel.
+
+Semantics: q holds the *last* ``nb`` positions of a length-``T`` stream;
+kv covers all ``T`` positions.  Causal: q at global position
+``T − nb + i`` attends to kv positions ``≤ T − nb + i``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def extend_attention_ref(q, k, v):
+    """q (B, nb, H, hd); k/v (B, T, H, hd) → (B, nb, H, hd), fp32 math."""
+    b, nb, h, hd = q.shape
+    t = k.shape[1]
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    sc = jnp.einsum("bqhd,bthd->bhqt", qf, kf) * (hd ** -0.5)
+    q_pos = t - nb + jnp.arange(nb)
+    k_pos = jnp.arange(t)
+    mask = q_pos[:, None] >= k_pos[None, :]
+    sc = jnp.where(mask[None, None], sc, -jnp.inf)
+    p = jnp.exp(sc - sc.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqt,bthd->bqhd", p, vf)
+    return out.astype(q.dtype)

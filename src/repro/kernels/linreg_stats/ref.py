@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused linear-regression statistics kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linreg_stats_ref(X: jnp.ndarray, y: jnp.ndarray):
+    """Returns ``A = XᵀX`` (d,d) and ``B = Xᵀy`` (d,), fp32 accumulation."""
+    Xf = X.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    A = jnp.dot(Xf.T, Xf, preferred_element_type=jnp.float32)
+    B = jnp.dot(Xf.T, yf, preferred_element_type=jnp.float32)
+    return A, B

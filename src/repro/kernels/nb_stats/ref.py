@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the Naive Bayes grouped-statistics kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def nb_stats_ref(X: jnp.ndarray, y: jnp.ndarray, n_classes: int):
+    """Per-class ``N_c`` (C,), ``S_jc`` (C,d), ``SS_jc`` (C,d)."""
+    Xf = X.astype(jnp.float32)
+    onehot = jnp.eye(n_classes, dtype=jnp.float32)[y]
+    counts = onehot.sum(0)
+    S = jnp.dot(onehot.T, Xf, preferred_element_type=jnp.float32)
+    SS = jnp.dot(onehot.T, Xf * Xf, preferred_element_type=jnp.float32)
+    return counts, S, SS

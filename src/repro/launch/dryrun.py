@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks device count at first init.
+__doc__ = """Multi-pod dry-run: lower + compile every (arch × shape) cell on
+the production mesh and extract the roofline inputs.
+
+For each cell this script:
+  1. builds parameter/optimizer/batch/cache trees as ShapeDtypeStructs with
+     NamedShardings (zero allocation),
+  2. ``jax.jit(step).lower(...).compile()`` — success proves the sharding
+     config is coherent (no mismatched specs, no unsupported collectives),
+  3. records ``memory_analysis()`` (fits-in-HBM evidence),
+     ``cost_analysis()`` (FLOPs/bytes) and the collective-op byte census
+     parsed from the optimized HLO,
+  4. writes one JSON per cell under ``results/dryrun/``.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--cells train_4k,...]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_SHAPE_RE = re.compile(r"(f8e4m3fn|f8e5m2|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred)\[([0-9,]*)\]")
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+          "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(tok: tuple[str, str]) -> int:
+    dt, dims = tok
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _BYTES[dt]
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device wire-byte census of collective ops in optimized HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for kind in _COLLECTIVES:
+            # match op invocations (e.g. "= bf16[...] all-reduce(") incl. -start
+            if f" {kind}(" in ls or f" {kind}-start(" in ls:
+                shapes = _SHAPE_RE.findall(ls)
+                if not shapes:
+                    continue
+                result_b = _shape_bytes(shapes[0])
+                operand_b = _shape_bytes(shapes[1]) if len(shapes) > 1 else result_b
+                if kind == "all-reduce":
+                    wire = 2 * result_b          # ring: reduce-scatter + all-gather
+                elif kind == "reduce-scatter":
+                    wire = operand_b             # sends ~full operand
+                else:
+                    wire = result_b
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += wire
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items() if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items() if isinstance(v, dict))
+    return out
+
+
+def _rules_for(cfg, shape, *, multi_pod: bool):
+    from repro.distributed.sharding import make_rules
+
+    fsdp = cfg.name != "mamba2-130m"
+    if shape.kind == "decode":
+        if shape.global_batch < 16:   # long_500k: nothing to shard on batch
+            rules = make_rules(multi_pod=multi_pod, fsdp=fsdp, batch_axes=None,
+                               cache_seq=("data", "model"))
+        else:
+            rules = make_rules(multi_pod=multi_pod, fsdp=fsdp, cache_seq="model")
+    else:
+        rules = make_rules(multi_pod=multi_pod, fsdp=fsdp)
+    if cfg.expand_kv:
+        rules = rules.with_overrides(kv_heads=None)  # replicate KV projections
+    return rules
+
+
+def build_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+               overrides: dict | None = None, compress_pod: bool = False,
+               rules_overrides: dict | None = None):
+    """Returns (fn, args, mesh, rules, bundle) ready to lower."""
+    from repro.configs import SHAPES, get_config
+    from repro.distributed.sharding import use_rules
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.registry import get_bundle
+    from repro.train.loop import make_train_step
+    from repro.train.optim import make_optimizer
+
+    cfg = get_config(arch_name)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = _rules_for(cfg, shape, multi_pod=multi_pod)
+    if rules_overrides:
+        rules = rules.with_overrides(
+            **{k: tuple(v) if isinstance(v, list) else v
+               for k, v in rules_overrides.items()})
+    bundle = get_bundle(cfg)
+    params = bundle.param_structs(rules, mesh)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer)
+        opt_state = bundle.opt_state_structs(opt, params, rules, mesh)
+        batch = bundle.train_batch_structs(shape, rules, mesh)
+        step_struct = jax.ShapeDtypeStruct((), jnp.int32)
+        if compress_pod and multi_pod:
+            from repro.distributed.multipod import make_multipod_train_step
+            from repro.distributed.sharding import strip_axis
+
+            mp_step, _ = make_multipod_train_step(bundle.model, mesh, opt)
+            ef = jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32,
+                                               sharding=p.sharding),
+                params)
+            inner_rules = strip_axis(rules, "pod")  # pod is manual inside
+
+            def fn(p, o, e, b, s):
+                with use_rules(inner_rules, mesh):
+                    return mp_step(p, o, e, b, s)
+
+            args = (params, opt_state, ef, batch, step_struct)
+            return fn, args, mesh, rules, bundle, shape
+
+        train_step, _ = make_train_step(bundle.model, opt)
+
+        def fn(p, o, b, s):
+            with use_rules(rules, mesh):
+                return train_step(p, o, b, s)
+
+        args = (params, opt_state, batch, step_struct)
+    elif shape.kind == "prefill":
+        batch = bundle.prefill_batch_structs(shape, rules, mesh)
+
+        def fn(p, b):
+            with use_rules(rules, mesh):
+                return bundle.model.prefill(p, b)
+
+        args = (params, batch)
+    else:  # decode
+        caches, tokens, pos = bundle.decode_args_structs(shape, rules, mesh, params)
+
+        def fn(p, c, t, s):
+            with use_rules(rules, mesh):
+                return bundle.model.decode_step(p, c, t, s)
+
+        args = (params, caches, tokens, pos)
+    return fn, args, mesh, rules, bundle, shape
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: Path = RESULTS, overrides: dict | None = None,
+             tag: str = "", compress_pod: bool = False,
+             rules_overrides: dict | None = None) -> dict:
+    t0 = time.time()
+    fn, args, mesh, rules, bundle, shape = build_cell(
+        arch_name, shape_name, multi_pod=multi_pod, overrides=overrides,
+        compress_pod=compress_pod, rules_overrides=rules_overrides)
+    n_dev = mesh.devices.size
+
+    with mesh:
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    loop_aware = analyze_hlo(hlo)  # trip-count-correct flops/collectives
+
+    rec = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "tag": tag,
+        "devices": int(n_dev),
+        "n_params": int(bundle.n_params),
+        "model_flops_dense": float(bundle.cfg.n_params_dense_estimate),
+        "model_flops_active": float(bundle.cfg.n_params_active_estimate),
+        "tokens": int(shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)),
+        "kind": shape.kind,
+        "seq_len": int(shape.seq_len),
+        "global_batch": int(shape.global_batch),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "collectives": coll,
+        "loop_aware": loop_aware,
+        "seconds": {"lower": t_lower, "compile": t_compile},
+        "hlo_ops": hlo.count("\n"),
+        "overrides": overrides or {},
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = ("multi" if multi_pod else "single") + (f"_{tag}" if tag else "")
+    fp = out_dir / f"{arch_name}__{shape_name}__{suffix}.json"
+    fp.write_text(json.dumps(rec, indent=1))
+    print(f"[dryrun] {arch_name:24s} {shape_name:12s} {suffix:12s} "
+          f"compile {t_compile:6.1f}s  temp/dev "
+          f"{rec['memory']['temp_bytes']/1e9:7.2f} GB  "
+          f"flops/dev {rec['cost'].get('flops', 0):.3e}  "
+          f"coll {coll['total_bytes']/1e6:8.1f} MB")
+    return rec
+
+
+def main() -> None:
+    from repro.configs import ARCHS, cells_for, get_config
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--cells", default="")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--overrides", default="", help="JSON dict of ArchConfig overrides")
+    ap.add_argument("--rules-overrides", default="",
+                    help="JSON dict of sharding-rule overrides")
+    ap.add_argument("--compress-pod", action="store_true",
+                    help="EF-int8 compressed pod-axis gradient exchange")
+    ap.add_argument("--out", default=str(RESULTS))
+    args = ap.parse_args()
+
+    overrides = json.loads(args.overrides) if args.overrides else None
+    rules_overrides = json.loads(args.rules_overrides) if args.rules_overrides else None
+    out_dir = Path(args.out)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    todo: list[tuple[str, str]] = []
+    if args.all:
+        only = set(args.cells.split(",")) if args.cells else None
+        for name in sorted(ARCHS):
+            for cell in cells_for(get_config(name)):
+                if only is None or cell in only:
+                    todo.append((name, cell))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, cell in todo:
+        for mp in meshes:
+            try:
+                run_cell(arch, cell, multi_pod=mp, out_dir=out_dir,
+                         overrides=overrides, tag=args.tag,
+                         compress_pod=args.compress_pod,
+                         rules_overrides=rules_overrides)
+            except Exception as e:
+                failures.append((arch, cell, mp, repr(e)))
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(todo) * len(meshes)} cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches JAX device state — required because the dry-run must
+set ``XLA_FLAGS`` before anything initializes the backend.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 chips per pod; the multi-pod mesh adds a leading pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever this host offers (CPU smoke / single-chip debugging)."""
+    n = len(jax.devices())
+    data = max(n // model_parallel, 1)
+    return jax.make_mesh((data, model_parallel), ("data", "model"))
+
+
+def mesh_devices(mesh) -> int:
+    import math
+
+    return math.prod(mesh.devices.shape)

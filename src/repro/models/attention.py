@@ -1,0 +1,177 @@
+"""GQA attention: blocked-softmax train/prefill path + cached decode path.
+
+Train/prefill use an online-softmax scan over KV blocks (flash-style in
+pure JAX): peak activation is O(S·block) instead of O(S²), which is what
+lets prefill_32k lower within HBM.  KV heads stay *unexpanded* — scores are
+computed in grouped form (B, KV, G, S, T-block) so GQA does 1/G of the
+MHA score memory traffic.
+
+Decode attends a single query position against the cache with plain
+einsums; with the cache's sequence axis sharded over the ``model`` mesh
+axis the SPMD partitioner turns the softmax/weighted-sum reductions into a
+split-K (flash-decoding style) merge automatically.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, proj_heads, proj_out, rms_norm, rope_angles
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray       # (d, H, hd)
+    wk: jnp.ndarray       # (d, KV, hd)
+    wv: jnp.ndarray       # (d, KV, hd)
+    wo: jnp.ndarray       # (H, hd, d)
+    q_norm: Optional[jnp.ndarray] = None  # (hd,)
+    k_norm: Optional[jnp.ndarray] = None
+
+
+def _project_qkv(p: AttnParams, x, kv_x, q_pos, k_pos, theta, qk_norm_eps=1e-6, rope=True):
+    q = proj_heads(x, p.wq)            # (B, S, H, hd)
+    k = proj_heads(kv_x, p.wk)         # (B, T, KV, hd)
+    v = proj_heads(kv_x, p.wv)
+    if p.q_norm is not None:
+        q = rms_norm(q, p.q_norm, qk_norm_eps)
+        k = rms_norm(k, p.k_norm, qk_norm_eps)
+    if rope:
+        qc, qs = rope_angles(q_pos, q.shape[-1], theta)
+        kc, ks = rope_angles(k_pos, k.shape[-1], theta)
+        q = apply_rope(q, qc, qs)
+        k = apply_rope(k, kc, ks)
+    return q, k, v
+
+
+def _grouped(q, n_kv):
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def blocked_attention(q, k, v, q_pos, k_pos, *, causal: bool, block: int = 512):
+    """Online-softmax over KV blocks.  q (B,S,H,hd); k/v (B,T,KV,hd)."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]                                  # may differ (MLA)
+    block = min(block, t)
+    if t % block != 0:   # smoke-scale fallback: single block
+        block = t
+    nb = t // block
+    qg = _grouped(q, kv).astype(jnp.float32)            # (B,S,KV,G,hd)
+    scale = hd ** -0.5
+
+    kb = k.reshape(b, nb, block, kv, hd)
+    vb = v.reshape(b, nb, block, kv, hd_v)
+    pb = k_pos.reshape(b, nb, block) if k_pos.ndim == 2 else k_pos.reshape(nb, block)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, pblk = xs                            # (B,block,KV,hd), …
+        # operands stay bf16 (MXU-native); accumulation is fp32
+        sc = jnp.einsum("bskgd,btkd->bkgst", qg, kblk,
+                        preferred_element_type=jnp.float32) * scale
+        if causal:
+            qp = q_pos if q_pos.ndim == 2 else q_pos[None]
+            kp = pblk if pblk.ndim == 2 else pblk[None]
+            mask = qp[:, None, None, :, None] >= kp[:, None, None, None, :]
+            sc = jnp.where(mask, sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(-1))               # (B,KV,G,S)
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, h // kv, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, h // kv, s), jnp.float32)
+    a0 = jnp.zeros((b, kv, h // kv, s, hd_v), jnp.float32)
+    xs = (
+        jnp.moveaxis(kb, 1, 0),
+        jnp.moveaxis(vb, 1, 0),
+        jnp.moveaxis(pb, 1, 0) if pb.ndim == 3 else pb,
+    )
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KV,G,S,hd_v)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, h, hd_v)
+    return out.astype(q.dtype)
+
+
+def expand_kv_heads(k, n_heads: int):
+    """Repeat KV heads up to the q-head count (TP-alignment; KV replicated)."""
+    kv = k.shape[2]
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=2)
+
+
+def self_attention(p: AttnParams, x, positions, *, causal: bool, theta: float,
+                   block: int = 512, expand_kv: bool = False):
+    """Full self-attention for train/prefill.  Returns (out, (k, v) cacheable)."""
+    q, k, v = _project_qkv(p, x, x, positions, positions, theta)
+    if expand_kv:
+        h = q.shape[2]
+        out = blocked_attention(q, expand_kv_heads(k, h), expand_kv_heads(v, h),
+                                positions, positions, causal=causal, block=block)
+    else:
+        out = blocked_attention(q, k, v, positions, positions, causal=causal,
+                                block=block)
+    return proj_out(out, p.wo), (k, v)
+
+
+def cross_attention(p: AttnParams, x, ctx_kv, *, block: int = 512):
+    """Attend x → precomputed context K/V (no RoPE, no mask)."""
+    k, v = ctx_kv
+    b, s = x.shape[:2]
+    q = proj_heads(x, p.wq)
+    if p.q_norm is not None:
+        q = rms_norm(q, p.q_norm)
+    pos_q = jnp.zeros((b, s), jnp.int32)
+    pos_k = jnp.zeros((b, k.shape[1]), jnp.int32)
+    t = k.shape[1]
+    blk = block if t % block == 0 else t
+    out = blocked_attention(q, k, v, pos_q, pos_k, causal=False, block=blk)
+    return proj_out(out, p.wo)
+
+
+def project_context(p: AttnParams, ctx):
+    """Precompute cross-attention K/V from context embeddings (cached)."""
+    k = proj_heads(ctx, p.wk)
+    v = proj_heads(ctx, p.wv)
+    if p.k_norm is not None:
+        k = rms_norm(k, p.k_norm)
+    return k, v
+
+
+def decode_attention(p: AttnParams, x, cache_k, cache_v, pos, *, theta: float,
+                     cache_len=None):
+    """One-step decode.  x (B,1,d); cache (B,T,KV,hd); pos (B,) int32.
+
+    Writes the new K/V at ``pos`` and attends over positions ≤ pos.
+    """
+    b = x.shape[0]
+    t, kv = cache_k.shape[1], cache_k.shape[2]
+    q, k_new, v_new = _project_qkv(
+        p, x, x, pos[:, None], pos[:, None], theta
+    )                                                     # q (B,1,H,hd)
+    cache_k = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))(
+        cache_k, k_new, pos
+    )
+    cache_v = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))(
+        cache_v, v_new, pos
+    )
+    h = q.shape[2]
+    qg = _grouped(q, kv)[:, 0].astype(jnp.float32)        # (B,KV,G,hd)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg, cache_k.astype(jnp.float32))
+    sc = sc * (q.shape[-1] ** -0.5)
+    valid = jnp.arange(t)[None] <= pos[:, None]           # (B,T)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    prob = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", prob, cache_v.astype(jnp.float32))
+    out = out.reshape(b, 1, h, q.shape[-1]).astype(x.dtype)
+    return proj_out(out, p.wo), (cache_k, cache_v)

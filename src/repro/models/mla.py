@@ -1,0 +1,101 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Q goes through a LoRA bottleneck; K/V are reconstructed from a shared
+``kv_lora_rank`` latent plus a decoupled RoPE key.  The decode path uses the
+**absorbed** formulation: query projections are folded through ``w_uk`` /
+``w_uv`` so attention runs directly in latent space and the cache is just
+``(c_kv, k_rope)`` — the memory win that makes MLA's 500× smaller KV cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+
+from .attention import NEG_INF, blocked_attention
+from .common import apply_rope, dense, proj_heads, proj_out, rms_norm, rope_angles
+
+
+class MLAParams(NamedTuple):
+    w_dq: jnp.ndarray     # (d, q_lora)
+    q_norm: jnp.ndarray   # (q_lora,)
+    w_uq: jnp.ndarray     # (q_lora, H, nope+rope)
+    w_dkv: jnp.ndarray    # (d, kv_lora + rope)
+    kv_norm: jnp.ndarray  # (kv_lora,)
+    w_uk: jnp.ndarray     # (kv_lora, H, nope)
+    w_uv: jnp.ndarray     # (kv_lora, H, v_dim)
+    w_o: jnp.ndarray      # (H, v_dim, d)
+
+
+def _latent(p: MLAParams, m: MLAConfig, x, positions, theta):
+    """Compressed KV stream: returns (c_kv normed, k_rope roped)."""
+    dkv = dense(x, p.w_dkv)                               # (B,T,kv_lora+rope)
+    c_kv = rms_norm(dkv[..., : m.kv_lora_rank], p.kv_norm)
+    k_rope = dkv[..., m.kv_lora_rank :][..., None, :]     # (B,T,1,rope)
+    kc, ks = rope_angles(positions, m.qk_rope_head_dim, theta)
+    k_rope = apply_rope(k_rope, kc, ks)[..., 0, :]        # shared across heads
+    return c_kv, k_rope
+
+
+def _queries(p: MLAParams, m: MLAConfig, x, positions, theta):
+    q = proj_heads(rms_norm(dense(x, p.w_dq), p.q_norm), p.w_uq)  # (B,S,H,nope+rope)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim :]
+    qc, qs = rope_angles(positions, m.qk_rope_head_dim, theta)
+    return q_nope, apply_rope(q_rope, qc, qs)
+
+
+def mla_self_attention(p: MLAParams, m: MLAConfig, x, positions, *, theta: float,
+                       block: int = 512):
+    """Train/prefill: expand K/V from the latent, blocked softmax.
+
+    Returns (out, (c_kv, k_rope)) — the cacheable latent stream.
+    """
+    b, s, _ = x.shape
+    h = p.w_uq.shape[1]
+    q_nope, q_rope = _queries(p, m, x, positions, theta)
+    c_kv, k_rope = _latent(p, m, x, positions, theta)
+    k_nope = proj_heads(c_kv, p.w_uk)                     # (B,T,H,nope)
+    v = proj_heads(c_kv, p.w_uv)                          # (B,T,H,v)
+    # pack rope part alongside nope so one blocked pass handles both terms
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (*k_nope.shape[:3], m.qk_rope_head_dim))], axis=-1)
+    # blocked_attention scales by packed dim^-0.5; MLA wants (nope+rope)^-0.5 — equal here
+    out = blocked_attention(q, k, v, positions, positions, causal=True, block=block)
+    return proj_out(out, p.w_o), (c_kv, k_rope)
+
+
+def mla_decode(p: MLAParams, m: MLAConfig, x, cache_ckv, cache_krope, pos, *,
+               theta: float):
+    """Absorbed-matrix decode in latent space.
+
+    cache_ckv (B,T,kv_lora); cache_krope (B,T,rope); pos (B,).
+    scores = q_nopeᵀ·W_uk·c + q_ropeᵀ·k_rope ; out = (probs·c)·W_uv.
+    """
+    b = x.shape[0]
+    t = cache_ckv.shape[1]
+    q_nope, q_rope = _queries(p, m, x, pos[:, None], theta)   # (B,1,H,·)
+    c_new, kr_new = _latent(p, m, x, pos[:, None], theta)
+    cache_ckv = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0)))(
+        cache_ckv, c_new, pos
+    )
+    cache_krope = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0)))(
+        cache_krope, kr_new, pos
+    )
+    # absorb: q' = q_nope @ W_uk  → latent-space query (B,H,kv_lora)
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], p.w_uk)
+    sc = jnp.einsum("bhl,btl->bht", q_lat.astype(jnp.float32),
+                    cache_ckv.astype(jnp.float32))
+    sc += jnp.einsum("bhr,btr->bht", q_rope[:, 0].astype(jnp.float32),
+                     cache_krope.astype(jnp.float32))
+    sc = sc * ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    valid = jnp.arange(t)[None] <= pos[:, None]
+    sc = jnp.where(valid[:, None, :], sc, NEG_INF)
+    prob = jax.nn.softmax(sc, axis=-1)
+    o_lat = jnp.einsum("bht,btl->bhl", prob, cache_ckv.astype(jnp.float32))
+    out = jnp.einsum("bhl,lhv->bhv", o_lat, p.w_uv.astype(jnp.float32))
+    out = out[:, None].astype(x.dtype)                    # (B,1,H,v)
+    return proj_out(out, p.w_o), (cache_ckv, cache_krope)

@@ -1,0 +1,199 @@
+"""Mixture-of-Experts layer: top-k routing + capacity-bucketed grouped GEMM.
+
+TPU adaptation: tokens are sorted by expert and scattered into a fixed
+``(E, capacity, d)`` buffer, then both expert GEMMs run as *block-dense*
+einsums the MXU likes — no ragged ops, fully differentiable, and SPMD-
+partitionable (buffer/experts shard over the mesh; the scatter lowers to
+the expert-parallel all-to-all).  Overflow tokens are dropped (capacity
+factor 1.25, GShard-style) — the canonical dropping MoE.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.distributed.sharding import constrain
+
+from .common import activation_fn, dense
+
+
+class ExpertParams(NamedTuple):
+    w_gate: jnp.ndarray   # (E, d, ff)  (swiglu gate; None-like zeros if unused)
+    w_up: jnp.ndarray     # (E, d, ff)
+    w_down: jnp.ndarray   # (E, ff, d)
+
+
+class MoEParams(NamedTuple):
+    router: jnp.ndarray   # (d, E)
+    experts: ExpertParams
+    shared: Optional[tuple] = None  # dense-MLP params for shared experts
+
+
+def _expert_ffn(tokens, w_gate, w_up, w_down, activation: str):
+    """tokens (E, C, d) → (E, C, d) via per-expert matmuls."""
+    if activation == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", tokens, w_gate)
+        u = jnp.einsum("ecd,edf->ecf", tokens, w_up)
+        h = jax.nn.silu(g) * u
+    else:
+        h = activation_fn(activation)(jnp.einsum("ecd,edf->ecf", tokens, w_up))
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def moe_ffn(p: MoEParams, cfg: MoEConfig, x, *, activation: str = "swiglu",
+            groups: int = 1):
+    """x (B, S, d) → (B, S, d), plus router aux loss.
+
+    ``groups > 1`` switches to the expert-parallel dispatch: tokens are
+    routed *locally* within each of ``groups`` data shards (no global
+    indices → the scatter partitions cleanly), and the capacity buffer is
+    re-sharded group-axis ↔ expert-axis around the expert GEMMs — GSPMD
+    lowers exactly that annotation change to the EP all-to-all, so wire
+    bytes are tokens·top_k·capacity_factor·d instead of a full buffer
+    all-gather (≈100× less for kimi-k2; see EXPERIMENTS.md §Perf).
+    """
+    if groups > 1:
+        return _moe_ffn_grouped(p, cfg, x, activation, groups)
+    capacity_factor = cfg.capacity_factor
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(n, d)
+
+    logits = dense(xt.astype(jnp.float32), p.router.astype(jnp.float32))  # (n, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)                        # (n, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E · Σ_e f_e · p_e
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[expert_ids.reshape(-1)].add(1.0) / (n * k)
+    aux = e * jnp.sum(me * ce)
+
+    capacity = int(math.ceil(n * k * capacity_factor / e))
+    capacity = max(capacity, 4)
+
+    flat_expert = expert_ids.reshape(-1)                                   # (n·k,)
+    flat_gate = gate_vals.reshape(-1)
+    # position of each assignment within its expert's bucket
+    order = jnp.argsort(flat_expert)                                       # stable
+    sorted_expert = flat_expert[order]
+    slot_in_expert = jnp.arange(n * k) - jnp.searchsorted(sorted_expert, sorted_expert)
+    keep = slot_in_expert < capacity
+    token_idx = order // k
+
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    buf = buf.at[sorted_expert, jnp.where(keep, slot_in_expert, 0)].add(
+        jnp.where(keep[:, None], xt[token_idx], 0.0)
+    )
+    # pin the dispatch buffer to the expert sharding so the scatter lowers to
+    # an all-to-all toward the expert shards instead of a full all-gather
+    buf = constrain(buf, "experts", None, None)
+
+    out_buf = _expert_ffn(buf, p.experts.w_gate, p.experts.w_up, p.experts.w_down,
+                          activation)
+    out_buf = constrain(out_buf, "experts", None, None)
+
+    gathered = out_buf[sorted_expert, jnp.where(keep, slot_in_expert, 0)]  # (n·k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    weighted = gathered * flat_gate[order][:, None]
+    out = jnp.zeros((n, d), x.dtype).at[token_idx].add(weighted.astype(x.dtype))
+
+    if p.shared is not None:
+        out = out + _shared_ffn(p.shared, xt, activation)
+    return out.reshape(b, s, d), aux
+
+
+def _dispatch_group(cfg: MoEConfig, router, x_g):
+    """Route one data-shard's tokens into its local capacity buffer.
+
+    All indices are group-local, so under vmap the scatter/gather never
+    crosses the group (= mesh data) axis.  Returns everything the combine
+    stage needs.
+    """
+    n, d = x_g.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = dense(x_g.astype(jnp.float32), router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[expert_ids.reshape(-1)].add(1.0) / (n * k)
+    aux = e * jnp.sum(me * ce)
+
+    capacity = max(int(math.ceil(n * k * cfg.capacity_factor / e)), 4)
+    flat_expert = expert_ids.reshape(-1)
+    order = jnp.argsort(flat_expert)
+    sorted_expert = flat_expert[order]
+    slot = jnp.arange(n * k) - jnp.searchsorted(sorted_expert, sorted_expert)
+    keep = slot < capacity
+    token_idx = order // k
+    buf = jnp.zeros((e, capacity, d), x_g.dtype)
+    buf = buf.at[sorted_expert, jnp.where(keep, slot, 0)].add(
+        jnp.where(keep[:, None], x_g[token_idx], 0.0))
+    gates_sorted = gate_vals.reshape(-1)[order]
+    return buf, sorted_expert, slot, keep, token_idx, gates_sorted, aux
+
+
+def _combine_group(out_buf_g, sorted_expert, slot, keep, token_idx, gates, n, dtype):
+    gathered = out_buf_g[sorted_expert, jnp.where(keep, slot, 0)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0) * gates[:, None]
+    return jnp.zeros((n, out_buf_g.shape[-1]), dtype).at[token_idx].add(
+        gathered.astype(dtype))
+
+
+def _moe_ffn_grouped(p: MoEParams, cfg: MoEConfig, x, activation: str, groups: int):
+    b, s, d = x.shape
+    n = b * s
+    assert n % groups == 0, (n, groups)
+    n_loc = n // groups
+    xg = x.reshape(groups, n_loc, d)
+    xg = constrain(xg, "moe_groups", None, None)
+
+    buf, se, slot, keep, tix, gates, aux = jax.vmap(
+        lambda xx: _dispatch_group(cfg, p.router, xx))(xg)
+    # dispatch done group-sharded; re-shard to expert-sharded for the GEMMs
+    buf = constrain(buf, "moe_groups", None, None, None)      # (G,E,C,d) g-sharded
+    buf = constrain(buf, None, "experts", None, None)         # ⇒ EP all-to-all
+
+    if activation == "swiglu":
+        g = jnp.einsum("gecd,edf->gecf", buf, p.experts.w_gate)
+        u = jnp.einsum("gecd,edf->gecf", buf, p.experts.w_up)
+        h = jax.nn.silu(g) * u
+    else:
+        h = activation_fn(activation)(jnp.einsum("gecd,edf->gecf", buf, p.experts.w_up))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p.experts.w_down)
+
+    out_buf = constrain(out_buf, None, "experts", None, None)
+    out_buf = constrain(out_buf, "moe_groups", None, None, None)  # ⇒ return all-to-all
+
+    combined = jax.vmap(
+        lambda ob, a, sl, kp, ti, gt: _combine_group(ob, a, sl, kp, ti, gt, n_loc, x.dtype)
+    )(out_buf, se, slot, keep, tix, gates)
+    out = combined.reshape(b, s, d)
+    if p.shared is not None:
+        out = out + _shared_ffn(p.shared, x.reshape(n, d), activation).reshape(b, s, d)
+    return out, aux.mean()
+
+
+def _shared_ffn(shared, xt, activation: str):
+    w_gate, w_up, w_down = shared
+    if activation == "swiglu":
+        h = jax.nn.silu(xt @ w_gate) * (xt @ w_up)
+    else:
+        h = activation_fn(activation)(xt @ w_up)
+    return h @ w_down
+
+
+def dense_ffn(params: dict, x, activation: str):
+    """Plain MLP; ``params`` has w_up/w_down and (for swiglu) w_gate."""
+    if activation == "swiglu":
+        h = jax.nn.silu(dense(x, params["w_gate"])) * dense(x, params["w_up"])
+    else:
+        h = activation_fn(activation)(dense(x, params["w_up"]))
+    return dense(h, params["w_down"])

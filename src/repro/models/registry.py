@@ -1,0 +1,159 @@
+"""Model bundles: config → LM + spec/sharding plumbing + input specs.
+
+Everything the launcher (and dry-run) needs per architecture, with **zero
+allocation**: parameter / optimizer / cache trees come out as
+ShapeDtypeStructs carrying NamedShardings.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.distributed.sharding import ShardingRules, safe_sharding
+from repro.models.common import ParamSpec, axes_tree, is_spec, param_count, spec_map
+from repro.models.lm import LM
+
+# cache-leaf logical axes by key name (leading dim is the scanned layer axis)
+_CACHE_AXES = {
+    "k": ("layers", "batch", "cache_seq", None, None),
+    "v": ("layers", "batch", "cache_seq", None, None),
+    "ck": ("layers", "batch", "ctx_seq", "kv_heads", None),
+    "cv": ("layers", "batch", "ctx_seq", "kv_heads", None),
+    "c_kv": ("layers", "batch", "cache_seq", None),
+    "k_rope": ("layers", "batch", "cache_seq", None),
+    "conv": ("layers", "batch", None, "ssm_inner"),
+    "ssm": ("layers", "batch", "ssm_heads", None, None),
+}
+
+
+@dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    model: LM
+
+    # -- parameter trees -----------------------------------------------------
+    def param_structs(self, rules: ShardingRules, mesh: Mesh):
+        def mk(s: ParamSpec):
+            sh = safe_sharding(s.shape, s.axes, rules, mesh)
+            return jax.ShapeDtypeStruct(s.shape, self.model.param_dtype, sharding=sh)
+
+        return spec_map(mk, self.model.specs)
+
+    def opt_state_structs(self, opt, params_struct, rules: ShardingRules, mesh: Mesh):
+        """eval_shape the optimizer init, then re-attach shardings derived
+        from parameter logical axes (factored moments drop the matching dim)."""
+        st = jax.eval_shape(opt.init, params_struct)
+        ax = axes_tree(self.model.specs)
+
+        def attach(struct_leaf, axes):
+            return jax.ShapeDtypeStruct(
+                struct_leaf.shape, struct_leaf.dtype,
+                sharding=safe_sharding(struct_leaf.shape, axes, rules, mesh))
+
+        def walk(st_node, ax_node):
+            if isinstance(st_node, dict):
+                out = {}
+                for k, v in st_node.items():
+                    if k == "count":
+                        out[k] = attach(v, ())
+                    elif k in ("m", "v", "per_param"):
+                        out[k] = walk(v, ax_node)
+                    elif k == "vr":
+                        out[k] = attach(v, ax_node[:-1])
+                    elif k == "vc":
+                        out[k] = attach(v, ax_node[:-2] + ax_node[-1:])
+                    else:
+                        out[k] = walk(v, ax_node[k] if isinstance(ax_node, dict) else ax_node)
+                return out
+            if isinstance(st_node, (list, tuple)):
+                t = type(st_node)
+                return t(walk(v, ax_node[i]) for i, v in enumerate(st_node))
+            if isinstance(st_node, jax.ShapeDtypeStruct):
+                axes = ax_node if isinstance(ax_node, tuple) else ()
+                if len(axes) != len(st_node.shape):
+                    axes = (None,) * len(st_node.shape)
+                return attach(st_node, axes)
+            return st_node
+
+        return walk(st, ax)
+
+    # -- batch specs -----------------------------------------------------------
+    def _batch_extras(self, gb: int, rules, mesh, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        out = {}
+        if cfg.encoder_layers:
+            shp = (gb, cfg.encoder_context, cfg.d_model)
+            out["enc_feats"] = jax.ShapeDtypeStruct(
+                shp, dtype, sharding=safe_sharding(shp, ("batch", None, None), rules, mesh))
+        if cfg.vision_context:
+            shp = (gb, cfg.vision_context, cfg.d_model)
+            out["image_embeds"] = jax.ShapeDtypeStruct(
+                shp, dtype, sharding=safe_sharding(shp, ("batch", None, None), rules, mesh))
+        return out
+
+    def train_batch_structs(self, shape: ShapeSpec, rules: ShardingRules, mesh: Mesh):
+        gb, s = shape.global_batch, shape.seq_len
+        tok = safe_sharding((gb, s), ("batch", None), rules, mesh)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((gb, s), jnp.int32, sharding=tok),
+            "targets": jax.ShapeDtypeStruct((gb, s), jnp.int32, sharding=tok),
+        }
+        batch.update(self._batch_extras(gb, rules, mesh))
+        return batch
+
+    def prefill_batch_structs(self, shape: ShapeSpec, rules, mesh):
+        gb, s = shape.global_batch, shape.seq_len
+        tok = safe_sharding((gb, s), ("batch", None), rules, mesh)
+        batch = {"tokens": jax.ShapeDtypeStruct((gb, s), jnp.int32, sharding=tok)}
+        batch.update(self._batch_extras(gb, rules, mesh))
+        return batch
+
+    def cache_structs(self, shape: ShapeSpec, rules: ShardingRules, mesh: Mesh,
+                      params_struct):
+        """Decode-cell caches of capacity ``shape.seq_len`` via eval_shape."""
+        pre_batch = self.prefill_batch_structs(shape, rules, mesh)
+        _, caches = jax.eval_shape(self.model.prefill, params_struct, pre_batch)
+
+        def attach(path, leaf):
+            key = None
+            for p in reversed(path):
+                if hasattr(p, "key"):
+                    key = p.key
+                    break
+            axes = _CACHE_AXES.get(key, (None,) * len(leaf.shape))
+            if len(axes) != len(leaf.shape):
+                axes = (None,) * len(leaf.shape)
+            sh = safe_sharding(leaf.shape, axes, rules, mesh)
+            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sh)
+
+        return jax.tree_util.tree_map_with_path(attach, caches)
+
+    def decode_args_structs(self, shape: ShapeSpec, rules, mesh, params_struct):
+        gb = shape.global_batch
+        tok = safe_sharding((gb, 1), ("batch", None), rules, mesh)
+        pos = safe_sharding((gb,), ("batch",), rules, mesh)
+        tokens = jax.ShapeDtypeStruct((gb, 1), jnp.int32, sharding=tok)
+        posv = jax.ShapeDtypeStruct((gb,), jnp.int32, sharding=pos)
+        caches = self.cache_structs(shape, rules, mesh, params_struct)
+        return caches, tokens, posv
+
+    # -- misc ----------------------------------------------------------------
+    @property
+    def n_params(self) -> int:
+        return param_count(self.model.specs)
+
+
+@functools.lru_cache(maxsize=64)
+def _bundle_cached(cfg: ArchConfig) -> ModelBundle:
+    return ModelBundle(cfg=cfg, model=LM(cfg))
+
+
+def get_bundle(cfg: ArchConfig) -> ModelBundle:
+    return _bundle_cached(cfg)

@@ -1,0 +1,159 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+TPU-native chunked formulation: the sequence is cut into chunks; intra-
+chunk terms are dense matmuls against a decay mask (MXU work), inter-chunk
+terms propagate O(h·p·n) states with a tiny chunk-level scan — no
+per-token sequential scan anywhere.  Used for mamba2-130m and (at Jamba's
+dims) the Jamba sequence mixer; see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+
+from .common import rms_norm
+
+
+class SSDParams(NamedTuple):
+    w_in: jnp.ndarray      # (d, 2·d_inner + 2·g·n + h)
+    conv_w: jnp.ndarray    # (width, conv_channels)  depthwise
+    conv_b: jnp.ndarray    # (conv_channels,)
+    a_log: jnp.ndarray     # (h,)
+    d_skip: jnp.ndarray    # (h,)
+    dt_bias: jnp.ndarray   # (h,)
+    out_norm: jnp.ndarray  # (d_inner,)
+    w_out: jnp.ndarray     # (d_inner, d)
+
+
+def _split_proj(cfg: SSMConfig, d_model: int, zxbcdt):
+    d_in = cfg.d_inner(d_model)
+    h = cfg.n_heads(d_model)
+    gn = cfg.n_groups * cfg.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, d_in + d_in + 2 * gn], axis=-1)
+    return z, xbc, dt, d_in, h, gn
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv over (B, L, C) with kernel (W, C)."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * conv_w[i] for i in range(w))
+    return jax.nn.silu(out + conv_b)
+
+
+def _segsum(a):
+    """(..., l) → (..., l, l) lower-tri segment sums (−inf above diag)."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x, a, B, C, chunk: int, initial_state=None):
+    """Chunked SSD.  x (b,l,h,p) pre-multiplied by dt; a (b,l,h) = dt·A;
+    B, C (b,l,g,n).  Returns y (b,l,h,p) and final state (b,h,p,n)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    chunk = min(chunk, l)
+    if l % chunk != 0:   # smoke-scale fallback: single chunk
+        chunk = l
+    c = l // chunk
+    rep = h // g
+
+    xc = x.reshape(b, c, chunk, h, p)
+    ac = a.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)        # (b,h,c,l)
+    Bc = B.reshape(b, c, chunk, g, n)
+    Cc = C.reshape(b, c, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)                             # (b,c,l,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    a_cum = jnp.cumsum(ac, -1)                                   # (b,h,c,l)
+    L = jnp.exp(_segsum(ac))                                     # (b,h,c,l,l)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Ch, Bh, L, xc)
+
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)              # (b,h,c,l)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bh, decay_states, xc)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), x.dtype)
+    chunk_decay = jnp.exp(a_cum[..., -1])                        # (b,h,c)
+
+    def step(carry, xs):
+        st, dec = xs                                             # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                        # emit state *entering* the chunk
+
+    final, entering = jax.lax.scan(
+        step,
+        initial_state,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    entering = entering.transpose(1, 0, 2, 3, 4)                 # (b,c,h,p,n)
+
+    state_decay = jnp.exp(a_cum)                                 # (b,h,c,l)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Ch, entering, state_decay)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def ssd_block(p: SSDParams, cfg: SSMConfig, d_model: int, x, *, norm_eps=1e-5,
+              return_state: bool = False, initial=None):
+    """Full Mamba-2 block on (B, L, d_model).  ``initial``/returned state is
+    (conv_state (B,W−1,C), ssm_state (B,h,p,n)) for decode handoff."""
+    b, l, _ = x.shape
+    z, xbc, dt, d_in, h, gn = _split_proj(cfg, d_model, x @ p.w_in)
+    if initial is not None:
+        conv_in = jnp.concatenate([initial[0], xbc], axis=1)
+        xbc_conv = _causal_conv(conv_in, p.conv_w, p.conv_b)[:, initial[0].shape[1]:]
+    else:
+        xbc_conv = _causal_conv(xbc, p.conv_w, p.conv_b)
+    xs, B, C = jnp.split(xbc_conv, [d_in, d_in + gn], axis=-1)
+    B = B.reshape(b, l, cfg.n_groups, cfg.d_state)
+    C = C.reshape(b, l, cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(dt + p.dt_bias)                         # (b,l,h)
+    a = dt * (-jnp.exp(p.a_log))                                 # (b,l,h)
+    xh = xs.reshape(b, l, h, cfg.head_dim)
+    y, final_ssm = ssd_scan(
+        xh * dt[..., None], a, B, C, cfg.chunk,
+        initial_state=None if initial is None else initial[1],
+    )
+    y = y + xh * p.d_skip[None, None, :, None]
+    y = y.reshape(b, l, d_in) * jax.nn.silu(z)
+    out = rms_norm(y, p.out_norm, norm_eps) @ p.w_out
+    if return_state:
+        w = p.conv_w.shape[0]
+        tail = xbc if initial is None else jnp.concatenate([initial[0], xbc], 1)
+        conv_state = tail[:, -(w - 1):, :]
+        return out, (conv_state, final_ssm)
+    return out
+
+
+def ssd_decode(p: SSDParams, cfg: SSMConfig, d_model: int, x, state, *, norm_eps=1e-5):
+    """Single-token recurrence.  x (B,1,d); state = (conv_state, ssm_state)."""
+    conv_state, ssm_state = state                                 # (B,W−1,C), (B,h,p,n)
+    b = x.shape[0]
+    z, xbc, dt, d_in, h, gn = _split_proj(cfg, d_model, x @ p.w_in)
+    full = jnp.concatenate([conv_state, xbc], axis=1)             # (B,W,C)
+    w = p.conv_w.shape[0]
+    conv_out = jax.nn.silu((full * p.conv_w[None]).sum(1, keepdims=True) + p.conv_b)
+    new_conv_state = full[:, 1:, :]
+    xs, B, C = jnp.split(conv_out, [d_in, d_in + gn], axis=-1)
+    B = B.reshape(b, cfg.n_groups, cfg.d_state)
+    C = C.reshape(b, cfg.n_groups, cfg.d_state)
+    rep = h // cfg.n_groups
+    Bh = jnp.repeat(B, rep, axis=1)                               # (B,h,n)
+    Ch = jnp.repeat(C, rep, axis=1)
+    dt = jax.nn.softplus(dt[:, 0] + p.dt_bias)                    # (B,h)
+    decay = jnp.exp(dt * (-jnp.exp(p.a_log)))                     # (B,h)
+    xh = xs[:, 0].reshape(b, h, cfg.head_dim) * dt[..., None]
+    ssm_state = ssm_state * decay[..., None, None] + xh[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_state, Ch)
+    y = y + xs[:, 0].reshape(b, h, cfg.head_dim) * p.d_skip[:, None]
+    y = y.reshape(b, 1, d_in) * jax.nn.silu(z)
+    out = rms_norm(y, p.out_norm, norm_eps) @ p.w_out
+    return out, (new_conv_state, ssm_state)

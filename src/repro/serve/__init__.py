@@ -1,0 +1,4 @@
+from .engine import ServeEngine, ServeStats
+from .kv_cache import SegmentStore
+
+__all__ = ["SegmentStore", "ServeEngine", "ServeStats"]

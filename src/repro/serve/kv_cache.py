@@ -1,0 +1,148 @@
+"""KV segment store: materialized caches with range descriptors.
+
+The serving-side instance of the paper's idea.  A prefill over document
+positions ``[0, b)`` yields cache tensors; we slice them into segments
+``[a_i, a_{i+1})`` and store each under its descriptor.  KV values for a
+position depend only on the (fixed) document prefix, so any stored segment
+is reusable by any later request — segments compose under **concatenation**
+(a monoid, no inverse), which is exactly the planner's directed/DAG case
+(§4/§5 of the paper, logistic-regression rules).
+
+SSD layers are the exception called out in DESIGN.md: their state is a
+running recurrence, so only *prefix-aligned* boundaries are cacheable — a
+segment's SSD entry stores the state *at the segment end*, valid only when
+every earlier position is covered by the plan (always true for DAG plans
+anchored at 0).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.descriptors import DescriptorIndex, Range
+
+#: cache keys whose axis 2 is the document/sequence axis
+SEQ_KEYS = ("k", "v", "c_kv", "k_rope")
+#: cache keys holding running state (kept only at segment end)
+STATE_KEYS = ("conv", "ssm")
+#: cache keys constant across the document (context K/V)
+CONST_KEYS = ("ck", "cv")
+
+
+def slice_cache(caches, lo: int, hi: int, *, base: int = 0):
+    """Extract segment [lo, hi) from caches covering [base, base+T)."""
+
+    def f(path, x):
+        key = _leaf_key(path)
+        if key in SEQ_KEYS:
+            return jax.lax.slice_in_dim(x, lo - base, hi - base, axis=2)
+        return x  # states & constants: value at end of the covered range
+    return jax.tree_util.tree_map_with_path(f, caches)
+
+
+def concat_caches(a, b):
+    """Concatenate segment caches along the document axis; running state and
+    constants are taken from the *later* segment."""
+
+    def f(path, xa, xb):
+        key = _leaf_key(path)
+        if key in SEQ_KEYS:
+            return jnp.concatenate([xa, xb], axis=2)
+        return xb
+    return jax.tree_util.tree_map_with_path(f, a, b)
+
+
+def cache_len(caches) -> int:
+    lens = []
+
+    def f(path, x):
+        if _leaf_key(path) in SEQ_KEYS:
+            lens.append(x.shape[2])
+        return x
+
+    jax.tree_util.tree_map_with_path(f, caches)
+    return max(lens) if lens else 0
+
+
+def pad_cache(caches, extra: int):
+    """Grow capacity along the sequence axis (for subsequent decode steps)."""
+
+    def f(path, x):
+        if _leaf_key(path) in SEQ_KEYS:
+            pads = [(0, 0)] * x.ndim
+            pads[2] = (0, extra)
+            return jnp.pad(x, pads)
+        return x
+
+    return jax.tree_util.tree_map_with_path(f, caches)
+
+
+def cache_nbytes(caches) -> int:
+    return sum(np.asarray(x).nbytes for x in jax.tree.leaves(caches))
+
+
+def _leaf_key(path) -> Optional[str]:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return p.key
+    return None
+
+
+@dataclass
+class StoredSegment:
+    seg_id: str
+    rng: Range
+    caches: Any
+    created_s: float = field(default_factory=time.time)
+    last_used_s: float = field(default_factory=time.time)
+
+    @property
+    def nbytes(self) -> int:
+        return cache_nbytes(self.caches)
+
+
+class SegmentStore:
+    """Descriptor-indexed KV segments with an LRU byte budget."""
+
+    def __init__(self, byte_budget: Optional[int] = None) -> None:
+        self.index = DescriptorIndex()
+        self._segs: dict[str, StoredSegment] = {}
+        self._seq = 0
+        self.byte_budget = byte_budget
+        self.evictions = 0
+
+    def put(self, rng: Range, caches) -> str:
+        self._seq += 1
+        sid = f"kv:{rng.lo}-{rng.hi}#{self._seq}"
+        self._segs[sid] = StoredSegment(sid, rng, caches)
+        self.index.add(sid, rng)
+        self._maybe_evict()
+        return sid
+
+    def get(self, sid: str) -> StoredSegment:
+        seg = self._segs[sid]
+        seg.last_used_s = time.time()
+        return seg
+
+    def nbytes(self) -> int:
+        return sum(s.nbytes for s in self._segs.values())
+
+    def __len__(self) -> int:
+        return len(self._segs)
+
+    def segment_bytes(self) -> dict[str, int]:
+        return {sid: s.nbytes for sid, s in self._segs.items()}
+
+    def _maybe_evict(self) -> None:
+        if self.byte_budget is None:
+            return
+        while self.nbytes() > self.byte_budget and len(self._segs) > 1:
+            victim = min(self._segs.values(), key=lambda s: s.last_used_s)
+            del self._segs[victim.seg_id]
+            self.index.remove(victim.seg_id)
+            self.evictions += 1

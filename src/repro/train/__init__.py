@@ -1,0 +1,11 @@
+from .optim import adafactor, adamw, clip_by_global_norm, warmup_cosine
+from .loop import TrainState, make_train_step
+
+__all__ = [
+    "TrainState",
+    "adafactor",
+    "adamw",
+    "clip_by_global_norm",
+    "make_train_step",
+    "warmup_cosine",
+]

@@ -1,0 +1,148 @@
+"""Checkpointing: sharded-on-disk, async, elastic across mesh changes.
+
+Layout (content-addressed for integrity at cluster scale):
+
+  <dir>/step_<N>/MANIFEST.json    — leaf paths, shapes, dtypes, file map, hashes
+  <dir>/step_<N>/arr_<i>.npy      — one file per leaf (per-host shards at scale)
+
+Restore is **mesh-agnostic**: arrays are loaded as host numpy and re-placed
+under whatever sharding the *current* mesh prescribes — that is the elastic
+path (N hosts → M hosts just re-shards on load).  The async writer moves
+`device_get` + IO off the training thread; `wait()` barriers before exit.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import queue
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(p) for p in kp) for kp, _ in flat]
+    leaves = [v for _, v in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(path: str | Path, tree: Any, *, extra_meta: dict | None = None) -> None:
+    root = Path(path)
+    root.mkdir(parents=True, exist_ok=True)
+    paths, leaves, _ = _flatten_with_paths(tree)
+    manifest = {"version": 1, "leaves": [], "meta": extra_meta or {},
+                "written_s": time.time()}
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"arr_{i:05d}.npy"
+        np.save(root / fname, arr)
+        digest = hashlib.sha256((root / fname).read_bytes()).hexdigest()
+        manifest["leaves"].append(
+            {"path": p, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype), "sha256": digest}
+        )
+    tmp = root / "MANIFEST.json.tmp"
+    tmp.write_text(json.dumps(manifest))
+    tmp.rename(root / "MANIFEST.json")   # atomic publish
+
+
+def restore_checkpoint(path: str | Path, like: Any, *, shardings: Any = None,
+                       verify: bool = False) -> Any:
+    """Restore into the structure of ``like``.
+
+    ``shardings``: optional tree (same structure) of ``jax.sharding.Sharding``
+    — the elastic re-shard path.  Without it, arrays stay host-resident
+    numpy (caller may device_put later).
+    """
+    root = Path(path)
+    manifest = json.loads((root / "MANIFEST.json").read_text())
+    paths, leaves, treedef = _flatten_with_paths(like)
+    by_path = {ent["path"]: ent for ent in manifest["leaves"]}
+    out = []
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = treedef.flatten_up_to(shardings)
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        ent = by_path.get(p)
+        if ent is None:
+            raise KeyError(f"checkpoint missing leaf {p!r}")
+        f = root / ent["file"]
+        if verify:
+            digest = hashlib.sha256(f.read_bytes()).hexdigest()
+            if digest != ent["sha256"]:
+                raise IOError(f"checksum mismatch for {ent['file']}")
+        arr = np.load(f)
+        want_shape = tuple(np.shape(leaf)) if hasattr(leaf, "shape") else arr.shape
+        if tuple(arr.shape) != tuple(want_shape):
+            raise ValueError(f"shape mismatch for {p}: ckpt {arr.shape} vs model {want_shape}")
+        if shard_leaves is not None:
+            arr = jax.device_put(arr, shard_leaves[i])
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(dirpath: str | Path) -> Optional[int]:
+    root = Path(dirpath)
+    if not root.exists():
+        return None
+    steps = []
+    for d in root.iterdir():
+        if d.is_dir() and d.name.startswith("step_") and (d / "MANIFEST.json").exists():
+            steps.append(int(d.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer with a bounded queue.
+
+    The training thread only pays for ``device_get`` staging; serialization
+    and IO happen off-thread.  A full queue back-pressures (blocks) rather
+    than dropping checkpoints.
+    """
+
+    def __init__(self, dirpath: str | Path, keep: int = 3) -> None:
+        self.dir = Path(dirpath)
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def save(self, step: int, tree: Any) -> None:
+        if self._err is not None:
+            raise self._err
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((step, host_tree))
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._err is not None:
+            raise self._err
+
+    def _run(self) -> None:
+        while True:
+            step, tree = self._q.get()
+            try:
+                save_checkpoint(self.dir / f"step_{step}", tree,
+                                extra_meta={"step": step})
+                self._gc()
+            except BaseException as e:  # surfaced on next save()/wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.name.split("_")[1])
+            for d in self.dir.iterdir()
+            if d.is_dir() and d.name.startswith("step_") and (d / "MANIFEST.json").exists()
+        )
+        for s in steps[: -self.keep]:
+            import shutil
+
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)

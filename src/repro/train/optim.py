@@ -1,0 +1,139 @@
+"""Optimizers (AdamW, factored Adafactor) and LR schedules — built in JAX.
+
+Optimizer state is a pytree whose leaves mirror the parameter tree, so it
+inherits parameter sharding (FSDP-sharded params ⇒ FSDP-sharded moments)
+with no extra plumbing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (new_params, new_state)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            new_p = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; the memory-frugal choice for ≥100B)
+# ---------------------------------------------------------------------------
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay_exp: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def per_param(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "per_param": jax.tree.map(per_param, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        beta = 1.0 - (count.astype(jnp.float32) ** -decay_exp)
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = beta * st["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * st["vc"] + (1 - beta) * g2.mean(-2)
+                denom = vr.mean(-1, keepdims=True)
+                u = g * jax.lax.rsqrt(vr[..., None] / jnp.maximum(denom[..., None], eps))
+                u = u * jax.lax.rsqrt(vc[..., None, :])
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_st = {"v": v}
+            # update clipping (RMS ≤ clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), new_st
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = treedef.flatten_up_to(params)
+        st_leaves = treedef.flatten_up_to(state["per_param"])
+        out = [upd(g, st, p) for g, st, p in zip(g_leaves, st_leaves, p_leaves)]
+        new_params = jax.tree.unflatten(treedef, [t[0] for t in out])
+        new_st = jax.tree.unflatten(treedef, [t[1] for t in out])
+        return new_params, {"per_param": new_st, "count": count}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return adamw()
+    if name == "adafactor":
+        return adafactor()
+    raise KeyError(name)

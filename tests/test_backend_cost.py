@@ -1,0 +1,49 @@
+"""RemoteStoreBackend cost structure + cost-model calibration."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cost import CostModel, calibrate
+from repro.core.descriptors import Range
+from repro.core.engine import IncrementalAnalyticsEngine
+from repro.data.synthetic import make_regression
+from repro.data.tabular import ArrayBackend, RemoteStoreBackend
+
+
+def test_remote_backend_monotone_and_calibrated():
+    X, y = make_regression(50_000, d=6, seed=0)
+    be = RemoteStoreBackend(ArrayBackend(X, y), fixed_s=2e-3, rows_per_s=1e6)
+    t0 = time.perf_counter()
+    be.fetch(Range(0, 1_000))
+    t_small = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    be.fetch(Range(0, 30_000))
+    t_large = time.perf_counter() - t0
+    assert t_large > t_small            # monotone F(n)
+    assert t_small >= 2e-3              # fixed cost honored
+    assert be.requests == 2 and be.rows_served == 31_000
+
+    cm = be.cost_model()
+    assert cm.fetch_points(30_000) > cm.fetch_points(1_000)
+    # calibrated model within 2× of observed wall time
+    assert cm.fetch_points(30_000) == pytest.approx(t_large, rel=1.0)
+
+
+def test_engine_uses_backend_cost_model():
+    X, y = make_regression(10_000, d=4, seed=1)
+    be = RemoteStoreBackend(ArrayBackend(X, y), fixed_s=1e-4, rows_per_s=1e7)
+    eng = IncrementalAnalyticsEngine(be)
+    assert eng.cost.io_fixed_s == pytest.approx(1e-4)
+
+
+def test_calibrate_fits_affine():
+    calls = []
+
+    def fetch(n):
+        calls.append(n)
+        time.sleep(1e-3 + n * 1e-8)
+
+    cm = calibrate(fetch, sizes=(1_000, 50_000), repeats=1)
+    assert isinstance(cm, CostModel)
+    assert cm.fetch_points(50_000) > cm.fetch_points(1_000) > 0

@@ -1,0 +1,100 @@
+"""Descriptor algebra + Alg 3 (PreprocessDescriptors) properties."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.descriptors import (
+    DescriptorIndex,
+    Range,
+    coalesce,
+    covered_size,
+    endpoints,
+    subtract_cover,
+)
+
+ranges = st.tuples(st.integers(0, 1000), st.integers(0, 1000)).map(
+    lambda t: Range(min(t), max(t))
+)
+
+
+def test_basics():
+    r = Range(5, 10)
+    assert r.size == 5
+    assert r.contains(Range(6, 9)) and not r.contains(Range(4, 9))
+    assert r.overlaps(Range(9, 20)) and not r.overlaps(Range(10, 20))
+    assert r.touches(Range(10, 20))
+    assert r.intersect(Range(8, 30)) == Range(8, 10)
+    assert r.difference(Range(6, 8)) == [Range(5, 6), Range(8, 10)]
+    with pytest.raises(ValueError):
+        Range(3, 1)
+
+
+@given(st.lists(ranges, max_size=30))
+@settings(max_examples=200, deadline=None)
+def test_coalesce_invariants(rs):
+    out = coalesce(rs)
+    # sorted, disjoint, non-adjacent
+    for a, b in zip(out, out[1:]):
+        assert a.hi < b.lo
+    # same point coverage
+    pts = set()
+    for r in rs:
+        pts.update(range(r.lo, r.hi))
+    cov = set()
+    for r in out:
+        cov.update(range(r.lo, r.hi))
+    assert pts == cov
+    assert covered_size(rs) == len(pts)
+
+
+@given(ranges, st.lists(ranges, max_size=10))
+@settings(max_examples=200, deadline=None)
+def test_subtract_cover(target, cover):
+    gaps = subtract_cover(target, cover)
+    pts_target = set(range(target.lo, target.hi))
+    pts_cover = set()
+    for c in cover:
+        pts_cover.update(range(c.lo, c.hi))
+    pts_gap = set()
+    for g in gaps:
+        pts_gap.update(range(g.lo, g.hi))
+    assert pts_gap == pts_target - pts_cover
+
+
+def test_enhanced_descriptors_alg3():
+    """Fig 1a: {D1,D2,D3} coalesce into one enhanced descriptor; D4 (separated
+    by a gap) stays alone.  (We also merge *adjacent* descriptors — adjacent
+    models combine exactly, so a superset of S_R is still correct.)"""
+    idx = DescriptorIndex()
+    idx.add("D1", Range(0, 30))
+    idx.add("D2", Range(10, 20))
+    idx.add("D3", Range(25, 40))   # overlaps D1
+    idx.add("D4", Range(45, 60))   # gap [40,45) → separate hull
+    hulls = idx.enhanced
+    assert [h.hull for h in hulls] == [Range(0, 40), Range(45, 60)]
+    assert set(hulls[0].members) == {"D1", "D2", "D3"}
+    assert hulls[1].members == ["D4"]
+
+
+def test_relevant_set():
+    idx = DescriptorIndex()
+    idx.add("A", Range(0, 10))
+    idx.add("B", Range(8, 20))     # overlaps A → same hull
+    idx.add("C", Range(50, 60))
+    # query intersects only A's range, but B is transitively relevant (Def. 1)
+    assert set(idx.relevant(Range(2, 5))) == {"A", "B"}
+    assert idx.relevant(Range(45, 48)) == []
+    idx.remove("B")
+    assert set(idx.relevant(Range(2, 5))) == {"A"}
+
+
+def test_coverage():
+    idx = DescriptorIndex()
+    idx.add("A", Range(0, 50))
+    idx.add("B", Range(25, 100))
+    assert idx.coverage(Range(0, 200)) == pytest.approx(0.5)
+
+
+def test_endpoints():
+    pts = endpoints([Range(5, 10), Range(8, 20)], Range(0, 15))
+    assert pts == [0, 5, 8, 10, 15, 20]

@@ -1,0 +1,163 @@
+"""End-to-end engine behaviour + materialized-model store."""
+import numpy as np
+import pytest
+
+from repro.core import linreg, logreg, naive_bayes
+from repro.core.descriptors import Range
+from repro.core.engine import IncrementalAnalyticsEngine
+from repro.core.store import ModelStore
+from repro.core.suffstats import LinRegStats
+from repro.data.synthetic import make_classification, make_regression
+from repro.data.tabular import ArrayBackend, TabularBackend
+
+
+@pytest.fixture(scope="module")
+def reg_backend():
+    X, y = make_regression(40_000, d=10, seed=0)
+    return ArrayBackend(X, y), X, y
+
+
+@pytest.fixture(scope="module")
+def cls_backend():
+    X, y = make_classification(40_000, d=10, n_classes=3, seed=1)
+    return ArrayBackend(X, y), X, y
+
+
+class TestEngineLinReg:
+    def test_reuse_equals_scratch(self, reg_backend):
+        be, X, y = reg_backend
+        eng = IncrementalAnalyticsEngine(be)
+        eng.warm("linreg", [Range(0, 15_000), Range(15_000, 28_000)])
+        q = eng.query("linreg", Range(0, 28_000))
+        ref = linreg.fit(X[:28_000], y[:28_000])
+        assert q.used_reuse and len(q.plan.models_used) == 2
+        np.testing.assert_allclose(q.model.weights, ref.weights, rtol=1e-8)
+
+    def test_subtraction_plan(self, reg_backend):
+        be, X, y = reg_backend
+        eng = IncrementalAnalyticsEngine(be)
+        eng.warm("linreg", [Range(0, 30_000)])
+        q = eng.query("linreg", Range(5_000, 30_000))
+        ref = linreg.fit(X[5_000:30_000], y[5_000:30_000])
+        assert q.used_reuse
+        assert any(s.sign == -1 for s in q.plan.steps)  # model minus prefix scan
+        np.testing.assert_allclose(q.model.weights, ref.weights, rtol=1e-7)
+
+    def test_materialize_always_grows_store(self, reg_backend):
+        be, _, _ = reg_backend
+        eng = IncrementalAnalyticsEngine(be, materialize="always")
+        assert len(eng.store) == 0
+        eng.query("linreg", Range(0, 10_000))
+        assert len(eng.store) == 1
+        # second identical query should now reuse it outright
+        q2 = eng.query("linreg", Range(0, 10_000))
+        assert q2.used_reuse and q2.plan.base_points == 0
+
+    def test_force_baseline(self, reg_backend):
+        be, _, _ = reg_backend
+        eng = IncrementalAnalyticsEngine(be)
+        eng.warm("linreg", [Range(0, 10_000)])
+        q = eng.query("linreg", Range(0, 10_000), force_baseline=True)
+        assert not q.used_reuse and q.plan.base_points == 10_000
+
+
+class TestEngineNB:
+    def test_reuse_equals_scratch(self, cls_backend):
+        be, X, y = cls_backend
+        eng = IncrementalAnalyticsEngine(be)
+        eng.warm("gaussian_nb", [Range(0, 20_000)])
+        q = eng.query("gaussian_nb", Range(0, 32_000))
+        ref = naive_bayes.fit_gaussian(X[:32_000], y[:32_000], 3)
+        np.testing.assert_allclose(q.model.mu, ref.mu, rtol=1e-9)
+        np.testing.assert_allclose(q.model.var, ref.var, rtol=1e-7)
+        assert q.model.accuracy(X, y) == ref.accuracy(X, y)
+
+
+class TestEngineLogReg:
+    def test_chunked_reuse_matches_all_chunks(self, cls_backend):
+        be, X, y = cls_backend
+        eng = IncrementalAnalyticsEngine(be, materialize="chunks")
+        q1 = eng.query("logreg", Range(0, 16_000), chunk_size=4_000)
+        assert len(q1.materialized_ids) == 4
+        q2 = eng.query("logreg", Range(0, 24_000), chunk_size=4_000)
+        assert q2.used_reuse
+        reused = [s for s in q2.plan.steps if s.model_id is not None]
+        assert len(reused) == 4          # all four warm chunks
+        assert q2.plan.base_points == 8_000
+        # equivalent to fitting all 6 chunks directly
+        from repro.core.suffstats import LogRegMixtureStats
+
+        total = LogRegMixtureStats.zero(10)
+        for s in range(0, 24_000, 4_000):
+            total = total + logreg.fit_chunk(X[s:s + 4_000], y[s:s + 4_000])
+        np.testing.assert_allclose(q2.model.weights, total.weights, rtol=1e-9)
+
+    def test_accuracy_vs_sgd(self, cls_backend):
+        be, X, y = cls_backend
+        eng = IncrementalAnalyticsEngine(be, materialize="chunks")
+        # binary subproblem: relabel
+        q = eng.query("logreg", Range(0, 30_000), chunk_size=5_000)
+        direct = logreg.fit_direct(X[:30_000], (y[:30_000] == 1).astype(np.int64))
+        # engine ran on 3-class labels treated as {0,1} membership mix — just
+        # assert model solves and bound computes; accuracy contract tested in
+        # test_models_exact with clean binary data
+        assert np.isfinite(q.model.weights).all()
+
+
+class TestStore:
+    def test_persistence_roundtrip(self, tmp_path):
+        store = ModelStore()
+        X, y = make_regression(1000, d=5, seed=3)
+        st = LinRegStats.from_data(X, y)
+        mid = store.put("linreg", Range(0, 1000), st, meta={"note": "t"})
+        store.save(tmp_path / "store")
+        loaded = ModelStore.load(tmp_path / "store")
+        assert len(loaded) == 1
+        got = loaded.get(mid)
+        assert got.rng == Range(0, 1000)
+        assert got.stats.allclose(st)
+        assert got.meta["note"] == "t"
+
+    def test_checksum_detects_corruption(self, tmp_path):
+        store = ModelStore()
+        X, y = make_regression(100, d=4, seed=4)
+        store.put("linreg", Range(0, 100), LinRegStats.from_data(X, y))
+        store.save(tmp_path / "s2")
+        victim = next((tmp_path / "s2").glob("model_*.npz"))
+        victim.write_bytes(victim.read_bytes()[:-7] + b"garbage")
+        with pytest.raises(IOError):
+            ModelStore.load(tmp_path / "s2")
+
+    def test_lru_eviction_budget(self):
+        X, y = make_regression(100, d=8, seed=5)
+        st = LinRegStats.from_data(X, y)
+        budget = st.nbytes * 3 + 10
+        store = ModelStore(byte_budget=budget)
+        for i in range(6):
+            store.put("linreg", Range(i * 100, (i + 1) * 100), st)
+        assert store.nbytes() <= budget
+        assert store.evictions >= 3
+
+    def test_storage_overhead_small(self, reg_backend):
+        """Table 1: materialized-model bytes ≪ base data bytes."""
+        be, X, y = reg_backend
+        eng = IncrementalAnalyticsEngine(be)
+        ranges = [Range(i * 5_000, (i + 1) * 5_000) for i in range(8)]  # 100% coverage
+        eng.warm("linreg", ranges)
+        base_bytes = X.nbytes + y.nbytes
+        assert eng.store.nbytes() / base_bytes < 0.02
+
+
+class TestTabularBackend:
+    def test_mmap_matches_array(self, tmp_path):
+        X, y = make_classification(5000, d=6, n_classes=2, seed=6)
+        tb = TabularBackend.write(tmp_path / "tab", X, y)
+        ab = ArrayBackend(X, y)
+        r = Range(1234, 4321)
+        Xa, ya = ab.fetch(r)
+        Xt, yt = tb.fetch(r)
+        np.testing.assert_array_equal(Xa, Xt)
+        np.testing.assert_array_equal(ya, yt)
+        assert tb.n_classes == 2
+        with pytest.raises(IndexError):
+            tb.fetch(Range(0, 10_000))

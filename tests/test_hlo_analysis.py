@@ -1,0 +1,121 @@
+"""Loop-aware HLO analyzer: exactness on closed-form probes."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import HloCostModel, analyze_hlo
+
+
+def test_scan_trip_counts_exact():
+    """FLOPs of a scanned matmul chain must include the trip multiplier."""
+
+    def f(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    txt = (
+        jax.jit(f)
+        .lower(jax.ShapeDtypeStruct((12, 64, 64), jnp.float32),
+               jax.ShapeDtypeStruct((8, 64), jnp.float32))
+        .compile()
+        .as_text()
+    )
+    res = analyze_hlo(txt)
+    true_flops = 12 * 2 * 8 * 64 * 64
+    assert res["flops"] == pytest.approx(true_flops, rel=1e-6)
+
+
+def test_nested_scan_multiplies():
+    def f(ws, x):
+        def outer(c, _):
+            def inner(ci, w):
+                return ci @ w, None
+
+            c2, _ = jax.lax.scan(inner, c, ws)
+            return c2, None
+
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    txt = (
+        jax.jit(f)
+        .lower(jax.ShapeDtypeStruct((3, 16, 16), jnp.float32),
+               jax.ShapeDtypeStruct((4, 16), jnp.float32))
+        .compile()
+        .as_text()
+    )
+    res = analyze_hlo(txt)
+    true_flops = 5 * 3 * 2 * 4 * 16 * 16
+    assert res["flops"] == pytest.approx(true_flops, rel=1e-6)
+
+
+def test_unlooped_matmul_and_hbm_proxy():
+    def f(a, b):
+        return a @ b
+
+    txt = (
+        jax.jit(f)
+        .lower(jax.ShapeDtypeStruct((32, 64), jnp.float32),
+               jax.ShapeDtypeStruct((64, 128), jnp.float32))
+        .compile()
+        .as_text()
+    )
+    res = analyze_hlo(txt)
+    assert res["flops"] == pytest.approx(2 * 32 * 64 * 128, rel=1e-6)
+    assert res["collective_bytes"] == 0.0
+
+
+def test_dus_fusion_charged_update_extent():
+    """A dynamic-update-slice fusion writes its update, not the aliased buffer."""
+    hlo = """HloModule m
+
+%fused_computation (param_0: s32[], param_1: f32[100,64], param_2: f32[1,64]) -> f32[100,64] {
+  %param_1 = f32[100,64]{1,0} parameter(1)
+  %param_2 = f32[1,64]{1,0} parameter(2)
+  %param_0 = s32[] parameter(0)
+  %c = s32[] constant(0)
+  ROOT %dynamic-update-slice.1 = f32[100,64]{1,0} dynamic-update-slice(%param_1, %param_2, %param_0, %c)
+}
+
+ENTRY %main (p0: s32[], p1: f32[100,64], p2: f32[1,64]) -> f32[100,64] {
+  %p0 = s32[] parameter(0)
+  %p1 = f32[100,64]{1,0} parameter(1)
+  %p2 = f32[1,64]{1,0} parameter(2)
+  ROOT %fusion = f32[100,64]{1,0} fusion(%p1, %p0, %p2), kind=kLoop, calls=%fused_computation
+}
+"""
+    cm = HloCostModel(hlo)
+    c = cm.cost()
+    # 2 × update bytes (1×64 f32 = 256B), not 2 × 100×64×4
+    assert c.fusion_bytes == pytest.approx(2 * 64 * 4)
+
+
+def test_trip_count_from_backend_config():
+    cm = HloCostModel("ENTRY %e (p: f32[2]) -> f32[2] {\n ROOT %p = f32[2]{0} parameter(0)\n}\n")
+    line = ('%while.5 = (s32[], f32[8,64]) while(%tuple), condition=%cond, body=%body, '
+            'backend_config={"known_trip_count":{"n":"42"}}')
+    assert cm.trip_count(line, "cond") == 42
+
+
+def test_top_contributors_shapes():
+    def f(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    txt = (
+        jax.jit(f)
+        .lower(jax.ShapeDtypeStruct((7, 32, 32), jnp.float32),
+               jax.ShapeDtypeStruct((4, 32), jnp.float32))
+        .compile()
+        .as_text()
+    )
+    cm = HloCostModel(txt)
+    top = cm.top_contributors(3, "flops")
+    assert top and top[0][0] == pytest.approx(7 * 2 * 4 * 32 * 32, rel=1e-6)
+    assert top[0][4] == 7  # multiplier = trip count

@@ -1,0 +1,39 @@
+"""Suffix (extend) attention kernel: shape/dtype sweeps vs the jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.extend_attention import ops
+from repro.kernels.extend_attention.ref import extend_attention_ref
+
+
+def _rand(shape, dtype, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(dtype)
+
+
+@pytest.mark.parametrize("nb,t", [(8, 8), (16, 48), (8, 200), (32, 257)])
+@pytest.mark.parametrize("hd", [64, 128])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_extend_attention_sweep(nb, t, hd, dtype):
+    assert t >= nb
+    b, h = 2, 2
+    q = _rand((b, nb, h, hd), np.float32, 1).astype(dtype)
+    k = _rand((b, t, h, hd), np.float32, 2).astype(dtype)
+    v = _rand((b, t, h, hd), np.float32, 3).astype(dtype)
+    out = ops.extend_attention(q, k, v, chunk=16)
+    ref = extend_attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    rtol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                               rtol=rtol, atol=rtol)
+
+
+def test_matches_fresh_prefill_semantics():
+    """extend over [prefix ‖ chunk] == the chunk rows of full causal attention."""
+    b, h, hd, t, nb = 1, 2, 64, 64, 16
+    q_all = _rand((b, t, h, hd), np.float32, 4)
+    k = _rand((b, t, h, hd), np.float32, 5)
+    v = _rand((b, t, h, hd), np.float32, 6)
+    full = extend_attention_ref(jnp.asarray(q_all), jnp.asarray(k), jnp.asarray(v))
+    out = ops.extend_attention(q_all[:, -nb:], k, v, chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, -nb:]),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,84 @@
+"""Pallas kernel sweeps: shapes × dtypes vs the pure-jnp ref oracles
+(interpret mode on CPU; identical call path on TPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.linreg_stats import ops as lr_ops
+from repro.kernels.linreg_stats.ref import linreg_stats_ref
+from repro.kernels.logreg_sgd import ops as lg_ops
+from repro.kernels.logreg_sgd.ref import logreg_sgd_ref
+from repro.kernels.nb_stats import ops as nb_ops
+from repro.kernels.nb_stats.ref import nb_stats_ref
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+@pytest.mark.parametrize("n", [64, 513, 2048])
+@pytest.mark.parametrize("d", [3, 10, 127, 130])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_linreg_stats_sweep(n, d, dtype):
+    X = _rand((n, d), np.float32, 1).astype(dtype)
+    y = _rand((n,), np.float32, 2).astype(dtype)
+    A, B = lr_ops.linreg_stats(X, y, block_n=256)
+    Ar, Br = linreg_stats_ref(jnp.asarray(X), jnp.asarray(y))
+    rtol = 5e-3 if dtype == jnp.bfloat16 else 5e-4
+    np.testing.assert_allclose(np.asarray(A), np.asarray(Ar), rtol=rtol, atol=n * 2e-2 * rtol)
+    np.testing.assert_allclose(np.asarray(B), np.asarray(Br), rtol=rtol, atol=n * 2e-2 * rtol)
+    assert A.shape == (d, d) and B.shape == (d,)
+
+
+def test_linreg_stats_with_yty():
+    X = _rand((500, 6), np.float32, 3)
+    y = _rand((500,), np.float32, 4)
+    _, _, yty = lr_ops.linreg_stats(X, y, with_yty=True)
+    np.testing.assert_allclose(float(yty), float(y @ y), rtol=1e-4)
+
+
+@pytest.mark.parametrize("n", [100, 1024])
+@pytest.mark.parametrize("d", [5, 64, 129])
+@pytest.mark.parametrize("n_classes", [2, 3, 13])
+def test_nb_stats_sweep(n, d, n_classes):
+    X = _rand((n, d), np.float32, 5)
+    y = np.random.default_rng(6).integers(0, n_classes, n).astype(np.int32)
+    c, S, SS = nb_ops.nb_stats(X, y, n_classes, block_n=256)
+    cr, Sr, SSr = nb_stats_ref(jnp.asarray(X), jnp.asarray(y), n_classes)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_allclose(np.asarray(S), np.asarray(Sr), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(SS), np.asarray(SSr), rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("n,batch", [(512, 64), (1000, 50), (4096, 128)])
+@pytest.mark.parametrize("d", [8, 100])
+def test_logreg_sgd_sweep(n, batch, d):
+    X = _rand((n, d), np.float32, 7)
+    y = (np.random.default_rng(8).random(n) > 0.5).astype(np.float32)
+    w = lg_ops.logreg_sgd(X, y, lam=1e-3, lr=0.3, batch=batch)
+    # oracle over padded/masked inputs (same padding as ops)
+    from repro.kernels.common import round_up
+
+    lp = round_up(n, batch)
+    Xp = jnp.pad(jnp.asarray(X), ((0, lp - n), (0, 0)))
+    yp = jnp.pad(jnp.asarray(y), (0, lp - n))
+    mask = jnp.pad(jnp.ones(n, jnp.float32), (0, lp - n))
+    wr = logreg_sgd_ref(Xp, yp, mask, lam=1e-3, lr=0.3, batch=batch)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(wr), rtol=2e-4, atol=2e-5)
+
+
+def test_logreg_sgd_batched_chunks():
+    X = _rand((4, 256, 10), np.float32, 9)
+    y = (np.random.default_rng(10).random((4, 256)) > 0.5).astype(np.float32)
+    w, b = lg_ops.logreg_sgd_batched(X, y, batch=64)
+    assert w.shape == (4, 10) and b.shape == (4, 1)
+    for i in range(4):
+        wi = lg_ops.logreg_sgd(X[i], y[i], batch=64)
+        np.testing.assert_allclose(np.asarray(w[i]), np.asarray(wi[:-1]), rtol=1e-5)
+
+
+def test_vmem_budget_guard():
+    with pytest.raises(ValueError):
+        lg_ops.logreg_sgd(np.zeros((200_000, 128), np.float32),
+                          np.zeros(200_000, np.float32), batch=64)

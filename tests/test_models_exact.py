@@ -1,0 +1,98 @@
+"""Exactness of incremental linreg / NB, approximation quality of logreg."""
+import numpy as np
+import pytest
+
+from repro.core import linreg, logreg, naive_bayes
+from repro.core.suffstats import LogRegMixtureStats
+from repro.data.synthetic import make_classification, make_multinomial, make_regression
+
+
+class TestLinReg:
+    def test_solution_matches_normal_equations(self):
+        X, y = make_regression(5000, d=8, seed=0)
+        m = linreg.fit(X, y, lam=1e-3)
+        w_ref = np.linalg.solve(X.T @ X + 1e-3 * np.eye(8), X.T @ y)
+        np.testing.assert_allclose(m.weights, w_ref, rtol=1e-8)
+        assert m.r2(X, y) > 0.9
+
+    def test_incremental_add_remove_exact(self):
+        X, y = make_regression(3000, d=6, seed=1)
+        full = linreg.compute_stats(X, y)
+        part = linreg.compute_stats(X[:2000], y[:2000])
+        added = linreg.add_points(part, X[2000:], y[2000:])
+        assert added.allclose(full, rtol=1e-9)
+        removed = linreg.remove_points(full, X[2000:], y[2000:])
+        assert removed.allclose(part, rtol=1e-9)
+        w_inc = linreg.solve(added).weights
+        w_ref = linreg.solve(full).weights
+        np.testing.assert_allclose(w_inc, w_ref, rtol=1e-10)
+
+    def test_pallas_backend_matches_numpy(self):
+        X, y = make_regression(2000, d=10, seed=2)
+        a = linreg.compute_stats(X, y, backend="numpy")
+        b = linreg.compute_stats(X, y, backend="pallas")
+        np.testing.assert_allclose(np.asarray(b.A), np.asarray(a.A), rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(b.B), np.asarray(a.B), rtol=2e-4, atol=1e-3)
+
+
+class TestGaussianNB:
+    def test_merge_exact_and_sane(self):
+        X, y = make_classification(6000, d=6, n_classes=3, seed=3)
+        m_full = naive_bayes.fit_gaussian(X, y, 3)
+        s1 = naive_bayes.compute_gaussian_stats(X[:2500], y[:2500], 3)
+        s2 = naive_bayes.compute_gaussian_stats(X[2500:], y[2500:], 3)
+        m_merged = naive_bayes.solve_gaussian(s1 + s2)
+        np.testing.assert_allclose(m_merged.mu, m_full.mu, rtol=1e-10)
+        np.testing.assert_allclose(m_merged.var, m_full.var, rtol=1e-8)
+        assert m_full.accuracy(X, y) > 0.8
+
+    def test_pallas_backend(self):
+        X, y = make_classification(1500, d=7, n_classes=4, seed=4)
+        a = naive_bayes.compute_gaussian_stats(X, y, 4, backend="numpy")
+        b = naive_bayes.compute_gaussian_stats(X, y, 4, backend="pallas")
+        np.testing.assert_allclose(np.asarray(b.counts), np.asarray(a.counts))
+        np.testing.assert_allclose(np.asarray(b.S), np.asarray(a.S), rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(b.SS), np.asarray(a.SS), rtol=1e-4, atol=1e-2)
+
+
+class TestMultinomialNB:
+    def test_fit_and_merge(self):
+        X, y = make_multinomial(4000, d=12, n_classes=3, seed=5)
+        full = naive_bayes.fit_multinomial(X, y, 3)
+        from repro.core.suffstats import MultinomialNBStats
+
+        s1 = MultinomialNBStats.from_data(X[:1000], y[:1000], 3)
+        s2 = MultinomialNBStats.from_data(X[1000:], y[1000:], 3)
+        merged = naive_bayes.solve_multinomial(s1 + s2)
+        np.testing.assert_allclose(merged.log_theta, full.log_theta, rtol=1e-10)
+        assert full.accuracy(X, y) > 0.7
+
+
+class TestLogReg:
+    def test_mixture_close_to_direct(self):
+        """§6.5: mixture accuracy within a few % of direct SGD."""
+        X, y = make_classification(20_000, d=10, n_classes=2, seed=6)
+        direct = logreg.fit_direct(X, y)
+        total = LogRegMixtureStats.zero(10)
+        l = 2_500
+        for s in range(0, len(y), l):
+            total = total + logreg.fit_chunk(X[s:s + l], y[s:s + l])
+        mix = logreg.solve(total)
+        a0, a = direct.accuracy(X, y), mix.accuracy(X, y)
+        assert a0 > 0.9
+        assert abs(a0 - a) < 0.03  # paper: max diff < 3%
+
+    def test_theorem1_bound_monotonicity(self):
+        b1 = logreg.mixture_bound(R=5.0, lam=0.1, chunk_size=1000, query_size=10_000, n_chunks=10)
+        b2 = logreg.mixture_bound(R=5.0, lam=0.1, chunk_size=4000, query_size=10_000, n_chunks=10)
+        assert b2 < b1          # larger chunks → tighter bound
+        b3 = logreg.mixture_bound(R=5.0, lam=0.2, chunk_size=1000, query_size=10_000, n_chunks=10)
+        assert b3 < b1          # more regularization → tighter
+        with pytest.raises(ValueError):
+            logreg.mixture_bound(R=1, lam=0.1, chunk_size=0, query_size=10, n_chunks=1)
+
+    def test_pallas_sgd_matches_numpy(self):
+        X, y = make_classification(1024, d=10, n_classes=2, seed=7)
+        w_np = logreg.sgd_pass(X, y, lam=1e-3, lr=0.5, batch=64)
+        w_pl = logreg.sgd_pass(X, y, lam=1e-3, lr=0.5, batch=64, backend="pallas")
+        np.testing.assert_allclose(w_pl, w_np, rtol=2e-4, atol=2e-4)

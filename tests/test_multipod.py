@@ -1,0 +1,60 @@
+"""Multi-pod compressed train step — needs >1 device, so runs in a
+subprocess with a forced host-device count (the main pytest process keeps
+its single-device view)."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.configs import ARCHS, reduced
+    from repro.models.lm import LM
+    from repro.distributed.multipod import make_multipod_train_step, ef_init
+    from repro.train.optim import make_optimizer, warmup_cosine
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cfg = reduced(ARCHS["qwen3-32b"]).replace(train_microbatches=2)
+    m = LM(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    opt = make_optimizer("adamw")
+    opt_state = opt.init(params)
+    ef = ef_init(params)
+    step_c, _ = make_multipod_train_step(
+        m, mesh, opt, microbatches=2, compress=True,
+        schedule=warmup_cosine(3e-3, 5, 100))
+    step_u, _ = make_multipod_train_step(
+        m, mesh, opt, microbatches=2, compress=False,
+        schedule=warmup_cosine(3e-3, 5, 100))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (8, 33), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :32], "targets": toks[:, 1:]}
+    with mesh:
+        jc = jax.jit(step_c)
+        ju = jax.jit(step_u)
+        pc, oc, efc = params, opt_state, ef
+        pu, ou = params, opt_state
+        for i in range(25):
+            pc, oc, efc, mc = jc(pc, oc, efc, batch, jnp.int32(i))
+            pu, ou, _, mu = ju(pu, ou, ef, batch, jnp.int32(i))
+        lc, lu = float(mc["loss"]), float(mu["loss"])
+        start = 6.25
+        assert lc < start - 0.2, f"compressed did not learn: {lc}"
+        # EF compression must track the uncompressed trajectory closely
+        assert abs(lc - lu) < 0.15, (lc, lu)
+        print(f"OK compressed={lc:.4f} uncompressed={lu:.4f}")
+""")
+
+
+def test_multipod_compressed_step_matches_uncompressed():
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        capture_output=True, text=True, timeout=900,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "OK" in res.stdout

@@ -1,0 +1,96 @@
+"""Property tests: the sufficient-statistics algebra is what the paper needs
+— an abelian group for linreg/NB (add + delete), a monoid for logreg."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.suffstats import (
+    GaussianNBStats,
+    LinRegStats,
+    LogRegMixtureStats,
+    MultinomialNBStats,
+)
+
+D, C = 4, 3
+
+
+def _data(seed, n):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, D))
+    y = rng.standard_normal(n)
+    yc = rng.integers(0, C, n)
+    return X, y, yc
+
+
+sizes = st.integers(1, 40)
+
+
+@given(sizes, sizes, sizes)
+@settings(max_examples=50, deadline=None)
+def test_linreg_group_laws(n1, n2, n3):
+    X1, y1, _ = _data(1, n1)
+    X2, y2, _ = _data(2, n2)
+    X3, y3, _ = _data(3, n3)
+    a = LinRegStats.from_data(X1, y1)
+    b = LinRegStats.from_data(X2, y2)
+    c = LinRegStats.from_data(X3, y3)
+    assert ((a + b) + c).allclose(a + (b + c))          # associativity
+    assert (a + b).allclose(b + a)                       # commutativity
+    zero = LinRegStats.zero(D)
+    assert (a + zero).allclose(a)                        # identity
+    assert ((a + b) - b).allclose(a, rtol=1e-9, atol=1e-9)  # inverse
+    # combined == from concatenated data (§3.3 Case 1)
+    both = LinRegStats.from_data(np.vstack([X1, X2]), np.concatenate([y1, y2]))
+    assert (a + b).allclose(both)
+
+
+@given(sizes, sizes)
+@settings(max_examples=50, deadline=None)
+def test_gaussian_nb_group_laws(n1, n2):
+    X1, _, y1 = _data(4, n1)
+    X2, _, y2 = _data(5, n2)
+    a = GaussianNBStats.from_data(X1, y1, C)
+    b = GaussianNBStats.from_data(X2, y2, C)
+    both = GaussianNBStats.from_data(np.vstack([X1, X2]), np.concatenate([y1, y2]), C)
+    assert (a + b).allclose(both)
+    assert ((a + b) - a).allclose(b, rtol=1e-9, atol=1e-9)
+    assert (a + GaussianNBStats.zero(D, C)).allclose(a)
+
+
+@given(sizes, sizes)
+@settings(max_examples=30, deadline=None)
+def test_multinomial_nb_group_laws(n1, n2):
+    rng = np.random.default_rng(6)
+    X1 = rng.poisson(2.0, (n1, D)).astype(float)
+    X2 = rng.poisson(2.0, (n2, D)).astype(float)
+    y1 = rng.integers(0, C, n1)
+    y2 = rng.integers(0, C, n2)
+    a = MultinomialNBStats.from_data(X1, y1, C)
+    b = MultinomialNBStats.from_data(X2, y2, C)
+    both = MultinomialNBStats.from_data(np.vstack([X1, X2]), np.concatenate([y1, y2]), C)
+    assert (a + b).allclose(both)
+    assert ((a + b) - b).allclose(a)
+
+
+def test_logreg_monoid_no_inverse():
+    w1 = LogRegMixtureStats.from_chunk_weights(np.ones(D + 1), 10)
+    w2 = LogRegMixtureStats.from_chunk_weights(2 * np.ones(D + 1), 10)
+    s = w1 + w2
+    assert np.allclose(s.weights, 1.5 * np.ones(D + 1))  # uniform μ_k average
+    with pytest.raises(TypeError):
+        _ = s - w1                                       # deletion unsupported (§4)
+
+
+def test_type_safety():
+    a = LinRegStats.zero(D)
+    b = GaussianNBStats.zero(D, C)
+    with pytest.raises(TypeError):
+        _ = a + b
+
+
+def test_nbytes_independent_of_n():
+    """§3.1: extra state is O(d²), independent of training-set size."""
+    small = LinRegStats.from_data(*_data(7, 10)[:2])
+    large = LinRegStats.from_data(*_data(8, 10_000)[:2])
+    assert small.nbytes == large.nbytes

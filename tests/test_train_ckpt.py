@@ -1,0 +1,143 @@
+"""Training substrate: optimizers, loop convergence, checkpoint/elastic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.data.pipeline import lm_pipeline
+from repro.models.lm import LM
+from repro.train.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.loop import make_train_step, train_loop
+from repro.train.optim import adafactor, adamw, clip_by_global_norm, warmup_cosine
+
+
+class TestOptim:
+    def _quad(self, opt, steps=300, lr=0.05):
+        params = {"w": jnp.array([3.0, -2.0, 1.5]), "b": jnp.array(4.0)}
+        target = {"w": jnp.array([1.0, 1.0, 1.0]), "b": jnp.array(0.0)}
+        state = opt.init(params)
+
+        def loss(p):
+            return sum(jnp.sum((a - b) ** 2) for a, b in
+                       zip(jax.tree.leaves(p), jax.tree.leaves(target)))
+
+        for _ in range(steps):
+            g = jax.grad(loss)(params)
+            params, state = opt.update(g, state, params, lr)
+        return float(loss(params))
+
+    def test_adamw_converges(self):
+        assert self._quad(adamw(weight_decay=0.0)) < 1e-3
+
+    def test_adafactor_converges(self):
+        params = {"W": jnp.ones((8, 4)) * 3.0}
+        opt = adafactor()
+        state = opt.init(params)
+        assert set(state["per_param"]["W"].keys()) == {"vr", "vc"}  # factored
+        assert state["per_param"]["W"]["vr"].shape == (8,)
+        assert state["per_param"]["W"]["vc"].shape == (4,)
+
+        def loss(p):
+            return jnp.sum(p["W"] ** 2)
+
+        for _ in range(200):
+            g = jax.grad(loss)(params)
+            params, state = opt.update(g, state, params, 0.05)
+        assert float(loss(params)) < 1e-2
+
+    def test_clip(self):
+        g = {"a": jnp.ones(4) * 100.0}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(200.0)
+        assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+    def test_schedule(self):
+        s = warmup_cosine(1e-3, 100, 1000)
+        assert float(s(0)) < float(s(99))
+        assert float(s(100)) == pytest.approx(1e-3, rel=1e-2)
+        assert float(s(999)) < 0.2 * 1e-3
+
+
+class TestLoop:
+    def test_loss_decreases(self):
+        cfg = reduced(ARCHS["qwen3-32b"]).replace(train_microbatches=2)
+        model = LM(cfg)
+        pipe = lm_pipeline(cfg.vocab_size, batch=8, seq=64, n_shards=2, seed=0)
+        batches = ({k: jnp.asarray(v) for k, v in b.items()} for b in pipe)
+        state, hist = train_loop(model, batches, steps=50,
+                                 schedule=warmup_cosine(3e-3, 10, 200))
+        pipe.close()
+        assert hist[-1]["loss"] < hist[0]["loss"] - 0.5
+        assert state.step == 50
+
+    def test_microbatching_equivalence(self):
+        """k microbatches must give the same grads as one big batch."""
+        cfg = reduced(ARCHS["deepseek-67b"])
+        model = LM(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        from repro.train.optim import make_optimizer
+
+        opt = make_optimizer("adamw")
+        opt_state = opt.init(params)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 33), 0, cfg.vocab_size)
+        batch = {"tokens": toks[:, :32], "targets": toks[:, 1:]}
+        outs = {}
+        for k in (1, 4):
+            step, _ = make_train_step(model, opt, microbatches=k)
+            p, o, m = jax.jit(step)(params, opt_state, batch, jnp.int32(0))
+            outs[k] = (p, float(m["loss"]))
+        assert outs[1][1] == pytest.approx(outs[4][1], rel=1e-5)
+        for a, b in zip(jax.tree.leaves(outs[1][0]), jax.tree.leaves(outs[4][0])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-6)
+
+
+class TestCheckpoint:
+    def _tree(self):
+        return {
+            "params": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones(3)},
+            "opt": {"count": jnp.int32(7)},
+        }
+
+    def test_roundtrip(self, tmp_path):
+        tree = self._tree()
+        save_checkpoint(tmp_path / "step_5", tree)
+        back = restore_checkpoint(tmp_path / "step_5", tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        tree = self._tree()
+        save_checkpoint(tmp_path / "s", tree)
+        bad = {"params": {"w": jnp.zeros((4, 4)), "b": jnp.ones(3)},
+               "opt": {"count": jnp.int32(0)}}
+        with pytest.raises(ValueError):
+            restore_checkpoint(tmp_path / "s", bad)
+
+    def test_elastic_reshard(self, tmp_path):
+        """Restore re-places arrays under a *different* sharding (mesh change)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        tree = self._tree()
+        save_checkpoint(tmp_path / "e", tree)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        shardings = jax.tree.map(
+            lambda x: NamedSharding(mesh, P()), tree)
+        back = restore_checkpoint(tmp_path / "e", tree, shardings=shardings)
+        assert back["params"]["w"].sharding == NamedSharding(mesh, P())
+
+    def test_async_checkpointer_and_gc(self, tmp_path):
+        ck = AsyncCheckpointer(tmp_path, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, {"x": jnp.ones(3) * s})
+        ck.wait()
+        assert latest_step(tmp_path) == 4
+        kept = sorted(int(d.name.split("_")[1]) for d in tmp_path.iterdir())
+        assert kept == [3, 4]
+        back = restore_checkpoint(tmp_path / "step_4", {"x": jnp.zeros(3)})
+        np.testing.assert_array_equal(np.asarray(back["x"]), 4 * np.ones(3))
