@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Fast test lane: everything except the @pytest.mark.slow subprocess/e2e
+# tests (multipod spawns an 8-device training subprocess; the arch smoke
+# matrix compiles every architecture).  Full suite remains the tier-1 gate:
+#   PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -q -m "not slow" "$@"

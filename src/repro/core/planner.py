@@ -59,34 +59,38 @@ def execute(
     chunk_size = int(params.get("chunk_size", 10_000))
     monoid = not family.supports_delete
 
-    for step in plan.steps:
-        if step.model_id is not None:
-            t0 = time.perf_counter()
-            stats = store.get(step.model_id).stats
-            timings.io_s += time.perf_counter() - t0
-        else:
-            t0 = time.perf_counter()
-            X, y = backend.fetch(step.rng)
-            timings.io_s += time.perf_counter() - t0
-            t0 = time.perf_counter()
-            if monoid and materialize_chunks:
-                # fit chunk-by-chunk and materialize each chunk (§4)
-                stats = None
-                for s in range(0, step.rng.size, chunk_size):
-                    sub = Range(step.rng.lo + s, min(step.rng.lo + s + chunk_size, step.rng.hi))
-                    cs = family.compute_stats(X[s : s + chunk_size], y[s : s + chunk_size], params)
-                    new_ids.append(store.put(family.name, sub, cs, meta={"chunked": True}))
-                    stats = cs if stats is None else stats + cs
+    # Chunk materialization below may trigger LRU eviction; pin every model
+    # this plan still has to read so a put cannot invalidate a later step
+    # (put-during-execute).
+    with store.pinned(plan.models_used):
+        for step in plan.steps:
+            if step.model_id is not None:
+                t0 = time.perf_counter()
+                stats = store.get(step.model_id).stats
+                timings.io_s += time.perf_counter() - t0
             else:
-                stats = family.compute_stats(X, y, params)
-            timings.compute_s += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                X, y = backend.fetch(step.rng)
+                timings.io_s += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                if monoid and materialize_chunks:
+                    # fit chunk-by-chunk and materialize each chunk (§4)
+                    stats = None
+                    for s in range(0, step.rng.size, chunk_size):
+                        sub = Range(step.rng.lo + s, min(step.rng.lo + s + chunk_size, step.rng.hi))
+                        cs = family.compute_stats(X[s : s + chunk_size], y[s : s + chunk_size], params)
+                        new_ids.append(store.put(family.name, sub, cs, meta={"chunked": True}))
+                        stats = cs if stats is None else stats + cs
+                else:
+                    stats = family.compute_stats(X, y, params)
+                timings.compute_s += time.perf_counter() - t0
 
-        t0 = time.perf_counter()
-        if step.sign > 0:
-            pos = stats if pos is None else pos + stats
-        else:
-            neg = stats if neg is None else neg + stats
-        timings.merge_s += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            if step.sign > 0:
+                pos = stats if pos is None else pos + stats
+            else:
+                neg = stats if neg is None else neg + stats
+            timings.merge_s += time.perf_counter() - t0
 
     if pos is None:
         raise RuntimeError("empty plan")

@@ -11,9 +11,10 @@ from __future__ import annotations
 import hashlib
 import json
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Any, Iterator, Optional
+from typing import Any, Iterable, Iterator, Optional
 
 import numpy as np
 
@@ -36,10 +37,63 @@ class StoredModel:
         return self.stats.nbytes
 
 
-class ModelStore:
+class PinnedLRU:
+    """Pin-aware LRU eviction shared by byte-budgeted stores.
+
+    Used by :class:`ModelStore` (materialized statistics) and the serving
+    ``SegmentStore`` (KV segments): both materialize new entries *during*
+    plan execution, so a put-triggered eviction must never reclaim an entry
+    a still-running plan references (put-during-execute).  Pins are
+    reentrant counts; the eviction loop lives here so policy changes apply
+    to every store.  Subclasses provide ``byte_budget``/``nbytes()``/
+    ``evictions`` plus the ``_entries()`` / ``_evict(victim)`` hooks.
+    """
+
+    def __init__(self) -> None:
+        self._pins: dict[str, int] = {}
+
+    @contextmanager
+    def pinned(self, ids: Iterable[str]):
+        """Hold the given entries in the store for the duration of the block."""
+        ids = [i for i in ids if i is not None]
+        for i in ids:
+            self._pins[i] = self._pins.get(i, 0) + 1
+        try:
+            yield
+        finally:
+            for i in ids:
+                n = self._pins.get(i, 0) - 1
+                if n > 0:
+                    self._pins[i] = n
+                else:
+                    self._pins.pop(i, None)
+            # puts during the block may have left the store over budget with
+            # nothing evictable; enforce the budget now that pins are gone
+            self._maybe_evict()
+
+    def _entries(self) -> dict:
+        raise NotImplementedError
+
+    def _evict(self, victim) -> None:
+        raise NotImplementedError
+
+    def _maybe_evict(self) -> None:
+        if self.byte_budget is None:
+            return
+        while self.nbytes() > self.byte_budget and len(self._entries()) > 1:
+            candidates = [e for k, e in self._entries().items()
+                          if k not in self._pins]
+            if not candidates:
+                return  # everything resident is pinned by in-flight plans
+            self._evict(min(candidates, key=lambda e: e.last_used_s))
+            self.evictions += 1
+
+
+class ModelStore(PinnedLRU):
     """Per-family materialized models, indexed for Alg 3/4."""
 
     def __init__(self, byte_budget: Optional[int] = None) -> None:
+        super().__init__()
         self._models: dict[str, StoredModel] = {}
         self._indexes: dict[str, DescriptorIndex] = {}
         self._seq = 0
@@ -93,13 +147,11 @@ class ModelStore:
     def coverage(self, family: str, universe: Range) -> float:
         return self.index(family).coverage(universe)
 
-    def _maybe_evict(self) -> None:
-        if self.byte_budget is None:
-            return
-        while self.nbytes() > self.byte_budget and len(self._models) > 1:
-            victim = min(self._models.values(), key=lambda sm: sm.last_used_s)
-            self.drop(victim.model_id)
-            self.evictions += 1
+    def _entries(self) -> dict:
+        return self._models
+
+    def _evict(self, victim: StoredModel) -> None:
+        self.drop(victim.model_id)
 
     # -- persistence -----------------------------------------------------------
     def save(self, path: str | Path) -> None:

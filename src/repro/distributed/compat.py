@@ -1,0 +1,41 @@
+"""JAX version compatibility for the distributed layer.
+
+``shard_map`` moved twice upstream: ``jax.experimental.shard_map.shard_map``
+(old), then ``jax.shard_map`` (new), with two keyword renames along the way
+(``check_rep`` → ``check_vma``; manual axes went from the complement
+``auto=`` to the direct ``axis_names=``).  Everything in this package goes
+through :func:`shard_map` below, written against the *new* calling
+convention and translated for old installs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+_NEW = hasattr(jax, "shard_map")
+if not _NEW:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names: Optional[set] = None):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``.
+
+    ``axis_names`` is the set of mesh axes to run manually (new-style); the
+    legacy API instead takes the *auto* complement, so we invert here.
+    """
+    if _NEW:
+        kwargs = {"check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    # Legacy installs: run *all* axes manually.  Passing the ``auto=``
+    # complement would match the new semantics exactly, but partial-manual
+    # subgroups crash XLA's sharding propagation on the JAX versions that
+    # still ship the experimental API (hlo_sharding_util IsManualSubgroup
+    # check failure); fully-manual is semantically identical — axes absent
+    # from the specs are simply replicated instead of auto-sharded.
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma)

@@ -14,6 +14,16 @@ def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def bucket_len(x: int, bucket: int, *, floor: int = 1) -> int:
+    """Pad-to-bucket length: smallest bucket multiple ≥ max(x, floor).
+
+    Batched serving pads every sequence in a decode batch to a shared
+    bucketed capacity so jitted kernels see a small, reusable set of shapes
+    instead of one compilation per (batch, seq-len) pair.
+    """
+    return round_up(max(x, floor), bucket)
+
+
 def pad_axis(x, axis: int, target: int, value=0.0):
     """Zero-pad ``x`` along ``axis`` up to length ``target``."""
     import jax.numpy as jnp

@@ -1,8 +1,14 @@
-"""Serving driver: batched requests over a shared document with
-descriptor-planned prefix reuse.
+"""Serving driver: descriptor-planned prefix reuse, single- or multi-session.
+
+Single session over one document:
 
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-67b --reduced \
       --doc-len 2048 --requests 8 --new-tokens 16
+
+Multi-session batched serving (shared segment store, continuous batching):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-67b --reduced \
+      --doc-len 1024 --sessions 6 --shared-docs 2 --requests 2 --new-tokens 8
 """
 from __future__ import annotations
 
@@ -12,28 +18,7 @@ import jax
 import numpy as np
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--doc-len", type=int, default=1024)
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--new-tokens", type=int, default=8)
-    ap.add_argument("--chunk-tokens", type=int, default=128)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    from repro.configs import get_config, reduced
-    from repro.models.lm import LM
-    from repro.serve.engine import ServeEngine
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
-    model = LM(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    doc = rng.integers(0, cfg.vocab_size, args.doc_len).astype(np.int32)
+def _extras(cfg):
     extras = {}
     if cfg.encoder_layers:
         import jax.numpy as jnp
@@ -43,8 +28,14 @@ def main() -> None:
         import jax.numpy as jnp
 
         extras["image_embeds"] = jnp.zeros((1, cfg.vision_context, cfg.d_model))
+    return extras
 
-    eng = ServeEngine(model, params, doc, extras=extras,
+
+def run_single(args, cfg, model, params, rng) -> None:
+    from repro.serve.engine import ServeEngine
+
+    doc = rng.integers(0, cfg.vocab_size, args.doc_len).astype(np.int32)
+    eng = ServeEngine(model, params, doc, extras=_extras(cfg),
                       chunk_tokens=args.chunk_tokens)
     for i in range(args.requests):
         L = int(rng.integers(args.doc_len // 4, args.doc_len))
@@ -57,6 +48,83 @@ def main() -> None:
           f"planner {s.planner_s*1e3:.1f} ms total, prefill {s.prefill_s:.2f}s, "
           f"decode {s.decode_s:.2f}s, store {len(eng.store)} segments "
           f"({eng.store.nbytes()/1e6:.1f} MB)")
+
+
+def run_multi(args, cfg, model, params, rng) -> None:
+    from repro.serve.session import SessionManager
+
+    n_shared = min(max(args.shared_docs, 0), args.sessions)
+    shared_doc = rng.integers(0, cfg.vocab_size, args.doc_len).astype(np.int32)
+    unique_docs = [rng.integers(0, cfg.vocab_size, args.doc_len).astype(np.int32)
+                   for _ in range(args.sessions - n_shared)]
+    budget = args.byte_budget if args.byte_budget > 0 else None
+    mgr = SessionManager(model, params, chunk_tokens=args.chunk_tokens,
+                         byte_budget=budget, decode_bucket=args.chunk_tokens,
+                         max_batch=args.max_batch)
+    extras = _extras(cfg)
+    # the first `n_shared` sessions all serve one document; the rest get unique docs
+    sids = []
+    for i in range(args.sessions):
+        doc = shared_doc if i < n_shared else unique_docs[i - n_shared]
+        sids.append(mgr.add_session(doc, extras=dict(extras)))
+
+    import time
+
+    t0 = time.perf_counter()
+    for r in range(args.requests):
+        for i, sid in enumerate(sids):
+            L = int(rng.integers(args.doc_len // 4, args.doc_len))
+            plan = mgr.submit(sid, L, args.new_tokens, greedy=False,
+                              seed=r * 1000 + i)
+            assert plan.validate_telescoping()
+        mgr.run()
+    wall = time.perf_counter() - t0
+
+    agg = mgr.aggregate_stats()
+    st = mgr.store
+    print(f"{args.sessions} sessions × {args.requests} requests "
+          f"({n_shared} on a shared doc):")
+    print(f"  aggregate: {agg.tokens_decoded} tokens decoded, "
+          f"{agg.tokens_decoded / wall:.1f} tok/s wall, reuse {agg.reuse_frac:.1%} "
+          f"({agg.tokens_reused} reused / {agg.tokens_computed} computed)")
+    print(f"  store: {len(st)} segments, {st.nbytes()/1e6:.1f} MB, "
+          f"{st.evictions} evictions, {st.cross_session_hits} cross-session hits")
+    print(f"  scheduler: {mgr.sched.decode_calls} batched decode calls, "
+          f"mean batch {mgr.sched.mean_batch:.2f}, "
+          f"{mgr.sched.pack_rebuilds} pack rebuilds")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--doc-len", type=int, default=1024)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--chunk-tokens", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sessions", type=int, default=1,
+                    help=">1 switches to the multi-session batched engine")
+    ap.add_argument("--shared-docs", type=int, default=2,
+                    help="how many sessions serve the same document")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--byte-budget", type=int, default=0,
+                    help="global segment-store budget in bytes (0 = unbounded)")
+    args = ap.parse_args()
+
+    from repro.configs import get_config, reduced
+    from repro.models.lm import LM
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    if args.sessions > 1:
+        run_multi(args, cfg, model, params, rng)
+    else:
+        run_single(args, cfg, model, params, rng)
 
 
 if __name__ == "__main__":

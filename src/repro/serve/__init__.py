@@ -1,4 +1,12 @@
-from .engine import ServeEngine, ServeStats
+from .engine import PrefixCacheBuilder, ServeEngine, ServeStats
 from .kv_cache import SegmentStore
+from .session import SessionManager, doc_key
 
-__all__ = ["SegmentStore", "ServeEngine", "ServeStats"]
+__all__ = [
+    "PrefixCacheBuilder",
+    "SegmentStore",
+    "ServeEngine",
+    "ServeStats",
+    "SessionManager",
+    "doc_key",
+]

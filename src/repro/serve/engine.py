@@ -1,12 +1,22 @@
 """Serving engine: batched decode with descriptor-planned prefix reuse.
 
-A session serves requests against one (long) document.  A request for a
-model over ``[0, L)`` — i.e. a KV cache covering the first L tokens — is
-planned with the paper's machinery: Dijkstra over segment descriptors
-(directed/monoid case), cached segments vs. prefill cost from a monotone
-cost model.  Gaps are prefilled in fixed-size chunks (the paper's ``l``)
-and each chunk is materialized for future requests — Alg 2, with KV
-segments in place of logistic-regression chunk models.
+A request for a model over ``[0, L)`` — i.e. a KV cache covering the first
+L tokens of a document — is planned with the paper's machinery: Dijkstra
+over segment descriptors (directed/monoid case), cached segments vs.
+prefill cost from a monotone cost model.  Gaps are prefilled in fixed-size
+chunks (the paper's ``l``) and each chunk is materialized for future
+requests — Alg 2, with KV segments in place of logistic-regression chunk
+models.
+
+Two front-ends share the machinery here:
+
+  * :class:`ServeEngine` — one session over one document (the original
+    single-tenant API, kept intact);
+  * :class:`repro.serve.session.SessionManager` — N sessions over a shared
+    document-keyed :class:`SegmentStore` with continuously-batched decode.
+
+Both drive a :class:`PrefixCacheBuilder`, which owns the jitted model entry
+points so compiled executables are shared across every session.
 """
 from __future__ import annotations
 
@@ -22,7 +32,8 @@ from repro.core.cost import CostModel
 from repro.core.descriptors import Range
 from repro.core.optimizer import Plan, baseline_plan, shortest_plan
 
-from .kv_cache import SegmentStore, cache_len, concat_caches, pad_cache, slice_cache
+from .kv_cache import (DEFAULT_DOC, SegmentStore, cache_len, concat_caches,
+                       pad_cache, slice_cache)
 
 
 @dataclass
@@ -30,6 +41,7 @@ class ServeStats:
     requests: int = 0
     tokens_reused: int = 0
     tokens_computed: int = 0
+    tokens_decoded: int = 0
     planner_s: float = 0.0
     prefill_s: float = 0.0
     decode_s: float = 0.0
@@ -55,7 +67,124 @@ def serve_cost_model(*, prefill_s_per_token: float = 1e-4,
     return cm
 
 
+class PrefixCacheBuilder:
+    """Plans and assembles KV prefix caches against a (shared) SegmentStore.
+
+    Stateless with respect to sessions: every call names the document
+    (``doc_id`` keys the store's descriptor index) and the stats object to
+    charge, so one builder serves any number of tenants with one set of
+    compiled executables.
+    """
+
+    def __init__(self, model, params, store: SegmentStore, *,
+                 chunk_tokens: int = 64,
+                 cost_model: Optional[CostModel] = None) -> None:
+        self.model = model
+        self.params = params
+        self.store = store
+        self.chunk = chunk_tokens
+        self.cost = cost_model if cost_model is not None else serve_cost_model()
+        self._jit_prefill = jax.jit(model.prefill)
+        self._jit_extend = jax.jit(model.prefill_extend, static_argnames=("start",))
+
+    # ------------------------------------------------------------------
+    def plan_prefix(self, length: int, *, doc_id: str = DEFAULT_DOC,
+                    stats: Optional[ServeStats] = None) -> Plan:
+        t0 = time.perf_counter()
+        plan = shortest_plan(
+            self.store.index(doc_id), Range(0, length), self.cost,
+            self.store.segment_bytes(doc_id), directed=True,
+        )
+        if stats is not None:
+            stats.planner_s += time.perf_counter() - t0
+        return plan
+
+    def build_prefix(self, doc: np.ndarray, length: int, *,
+                     doc_id: str = DEFAULT_DOC,
+                     extras: Optional[dict] = None,
+                     stats: Optional[ServeStats] = None,
+                     materialize: bool = True,
+                     requester: Optional[int] = None):
+        """Assemble the KV cache for document[:length] via the cheapest plan.
+
+        Returns (caches, plan).  Base-scan steps run ``prefill_extend`` in
+        ``chunk_tokens`` chunks, each materialized (paper Alg 2 behaviour).
+        Segments the plan references are pinned for the duration so chunk
+        puts can never evict them mid-execution.
+        """
+        stats = stats if stats is not None else ServeStats()
+        extras = extras or {}
+        plan = self.plan_prefix(length, doc_id=doc_id, stats=stats)
+        steps = sorted(plan.steps, key=lambda s: s.rng.lo)  # DAG path is ordered
+        caches = None
+        t0 = time.perf_counter()
+        with self.store.pinned(plan.models_used):
+            for st in steps:
+                if st.model_id is not None:
+                    seg = self.store.get(st.model_id, requester=requester)
+                    seg_caches = seg.caches
+                    caches = seg_caches if caches is None else concat_caches(caches, seg_caches)
+                    stats.tokens_reused += st.rng.size
+                else:
+                    for lo in range(st.rng.lo, st.rng.hi, self.chunk):
+                        hi = min(lo + self.chunk, st.rng.hi)
+                        toks = jnp.asarray(doc[None, lo:hi])
+                        if caches is None and lo == 0:
+                            batch = {"tokens": toks, **extras}
+                            _, caches = self._jit_prefill(self.params, batch)
+                        else:
+                            _, caches = self._jit_extend(self.params, caches, toks, start=lo)
+                        if materialize:
+                            self.store.put(Range(lo, hi), slice_cache(caches, lo, hi),
+                                           doc_id=doc_id, created_by=requester)
+                        stats.tokens_computed += hi - lo
+        stats.prefill_s += time.perf_counter() - t0
+        return caches, plan
+
+    def prefix_with_logits(self, doc: np.ndarray, prefix_len: int, *,
+                           doc_id: str = DEFAULT_DOC,
+                           extras: Optional[dict] = None,
+                           stats: Optional[ServeStats] = None,
+                           requester: Optional[int] = None):
+        """Cache for [0, prefix_len) plus the logits of its last position.
+
+        The last prefix token runs through a 1-token extend so its logits
+        (= the first sampling distribution) come out of the same pass that
+        completes the cache — correct for running-state (SSD) layers too.
+        """
+        stats = stats if stats is not None else ServeStats()
+        extras = extras or {}
+        if prefix_len < 2:
+            batch = {"tokens": jnp.asarray(doc[None, :prefix_len]), **extras}
+            t0 = time.perf_counter()
+            logits, caches = self._jit_prefill(self.params, batch)
+            stats.prefill_s += time.perf_counter() - t0
+            stats.tokens_computed += prefix_len
+            return logits, caches, baseline_plan(Range(0, prefix_len), self.cost)
+        caches, plan = self.build_prefix(
+            doc, prefix_len - 1, doc_id=doc_id, extras=extras, stats=stats,
+            materialize=True, requester=requester)
+        toks = jnp.asarray(doc[None, prefix_len - 1: prefix_len])
+        t0 = time.perf_counter()
+        logits, caches = self._jit_extend(self.params, caches, toks,
+                                          start=prefix_len - 1)
+        stats.prefill_s += time.perf_counter() - t0
+        stats.tokens_computed += 1
+        return logits, caches, plan
+
+    def prefill_raw(self, batch):
+        """Jitted from-scratch prefill (no planning, no materialization)."""
+        return self._jit_prefill(self.params, batch)
+
+
 class ServeEngine:
+    """Single-session serving over one document (original API).
+
+    ``store``/``doc_id`` default to a private store; pass a shared
+    :class:`SegmentStore` and a stable ``doc_id`` to join a multi-tenant
+    deployment (see :class:`repro.serve.session.SessionManager`).
+    """
+
     def __init__(
         self,
         model,
@@ -66,98 +195,65 @@ class ServeEngine:
         chunk_tokens: int = 64,
         cost_model: Optional[CostModel] = None,
         byte_budget: Optional[int] = None,
+        store: Optional[SegmentStore] = None,
+        doc_id: str = DEFAULT_DOC,
     ) -> None:
         self.model = model
         self.params = params
         self.doc = np.asarray(doc_tokens, np.int32)
         self.extras = extras or {}
-        self.chunk = chunk_tokens
-        self.store = SegmentStore(byte_budget=byte_budget)
-        self.cost = cost_model if cost_model is not None else serve_cost_model()
+        self.doc_id = doc_id
+        if store is not None and byte_budget is not None:
+            raise ValueError(
+                "pass byte_budget only when the engine owns its store; a "
+                "shared store's budget is set where the store is created")
+        self.store = store if store is not None else SegmentStore(byte_budget=byte_budget)
+        self.builder = PrefixCacheBuilder(model, params, self.store,
+                                          chunk_tokens=chunk_tokens,
+                                          cost_model=cost_model)
+        self.cost = self.builder.cost
         self.stats = ServeStats()
-        self._jit_prefill = jax.jit(model.prefill)
-        self._jit_extend = jax.jit(model.prefill_extend, static_argnames=("start",))
         self._jit_decode = jax.jit(model.decode_step)
+
+    @property
+    def chunk(self) -> int:
+        return self.builder.chunk
 
     # ------------------------------------------------------------------
     def plan_prefix(self, length: int) -> Plan:
-        t0 = time.perf_counter()
-        plan = shortest_plan(
-            self.store.index, Range(0, length), self.cost,
-            self.store.segment_bytes(), directed=True,
-        )
-        self.stats.planner_s += time.perf_counter() - t0
-        return plan
+        return self.builder.plan_prefix(length, doc_id=self.doc_id,
+                                        stats=self.stats)
 
     def build_prefix(self, length: int, *, materialize: bool = True):
-        """Assemble the KV cache for document[:length] via the cheapest plan.
-
-        Returns (caches, plan).  Base-scan steps run ``prefill_extend`` in
-        ``chunk_tokens`` chunks, each materialized (paper Alg 2 behaviour).
-        """
-        plan = self.plan_prefix(length)
-        steps = sorted(plan.steps, key=lambda s: s.rng.lo)  # DAG path is ordered
-        caches = None
-        logits = None
-        t0 = time.perf_counter()
-        for st in steps:
-            if st.model_id is not None:
-                seg = self.store.get(st.model_id)
-                seg_caches = seg.caches
-                caches = seg_caches if caches is None else concat_caches(caches, seg_caches)
-                self.stats.tokens_reused += st.rng.size
-            else:
-                for lo in range(st.rng.lo, st.rng.hi, self.chunk):
-                    hi = min(lo + self.chunk, st.rng.hi)
-                    toks = jnp.asarray(self.doc[None, lo:hi])
-                    if caches is None and lo == 0:
-                        batch = {"tokens": toks, **{k: v for k, v in self.extras.items()}}
-                        logits, caches = self._jit_prefill(self.params, batch)
-                    else:
-                        logits, caches = self._jit_extend(self.params, caches, toks, start=lo)
-                    if materialize:
-                        self.store.put(Range(lo, hi), slice_cache(caches, lo, hi))
-                    self.stats.tokens_computed += hi - lo
-        self.stats.prefill_s += time.perf_counter() - t0
-        return caches, plan
+        return self.builder.build_prefix(
+            self.doc, length, doc_id=self.doc_id, extras=self.extras,
+            stats=self.stats, materialize=materialize)
 
     # ------------------------------------------------------------------
     def generate(self, prefix_len: int, n_new: int, *, greedy: bool = True,
                  seed: int = 0):
-        """Serve one request: cache for [0, prefix_len), then decode n_new.
-
-        The last prefix token runs through a 1-token extend so its logits
-        (= the first sampling distribution) come out of the same pass that
-        completes the cache — correct for running-state (SSD) layers too.
-        """
+        """Serve one request: cache for [0, prefix_len), then decode n_new."""
         self.stats.requests += 1
-        if prefix_len < 2:
-            batch = {"tokens": jnp.asarray(self.doc[None, :prefix_len]), **self.extras}
-            logits, caches = self._jit_prefill(self.params, batch)
-            plan = baseline_plan(Range(0, prefix_len), self.cost)
-        else:
-            caches, plan = self.build_prefix(prefix_len - 1, materialize=True)
-            toks = jnp.asarray(self.doc[None, prefix_len - 1: prefix_len])
-            t0 = time.perf_counter()
-            logits, caches = self._jit_extend(self.params, caches, toks,
-                                              start=prefix_len - 1)
-            self.stats.prefill_s += time.perf_counter() - t0
-            self.stats.tokens_computed += 1
+        logits, caches, plan = self.builder.prefix_with_logits(
+            self.doc, prefix_len, doc_id=self.doc_id, extras=self.extras,
+            stats=self.stats)
         caches = pad_cache(caches, n_new)
         t0 = time.perf_counter()
         out_tokens = []
         key = jax.random.PRNGKey(seed)
         pos = jnp.asarray([prefix_len], jnp.int32)
-        for _ in range(n_new):
+        for i in range(n_new):
             if greedy:
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             else:
                 key, sub = jax.random.split(key)
                 nxt = jax.random.categorical(sub, logits).astype(jnp.int32)
             out_tokens.append(int(nxt[0]))
-            logits, caches = self._jit_decode(self.params, caches, nxt[:, None], pos)
-            pos = pos + 1
+            if i < n_new - 1:  # the last token's logits are never consumed
+                logits, caches = self._jit_decode(self.params, caches, nxt[:, None], pos)
+                pos = pos + 1
         self.stats.decode_s += time.perf_counter() - t0
+        self.stats.tokens_decoded += len(out_tokens)
         return out_tokens, plan
 
     # ------------------------------------------------------------------
@@ -165,6 +261,6 @@ class ServeEngine:
         """No-reuse reference: prefill everything from scratch."""
         batch = {"tokens": jnp.asarray(self.doc[None, :length]), **self.extras}
         t0 = time.perf_counter()
-        logits, caches = self._jit_prefill(self.params, batch)
+        logits, caches = self.builder.prefill_raw(batch)
         jax.block_until_ready(logits)
         return caches, time.perf_counter() - t0

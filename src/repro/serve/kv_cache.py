@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.descriptors import DescriptorIndex, Range
+from repro.core.store import PinnedLRU
 
 #: cache keys whose axis 2 is the document/sequence axis
 SEQ_KEYS = ("k", "v", "c_kv", "k_rope")
@@ -93,11 +94,18 @@ def _leaf_key(path) -> Optional[str]:
     return None
 
 
+DEFAULT_DOC = "doc"
+
+
 @dataclass
 class StoredSegment:
     seg_id: str
     rng: Range
     caches: Any
+    doc_id: str = DEFAULT_DOC
+    created_by: Optional[int] = None   # session id that materialized it
+    hits: int = 0
+    cross_session_hits: int = 0
     created_s: float = field(default_factory=time.time)
     last_used_s: float = field(default_factory=time.time)
 
@@ -106,43 +114,78 @@ class StoredSegment:
         return cache_nbytes(self.caches)
 
 
-class SegmentStore:
-    """Descriptor-indexed KV segments with an LRU byte budget."""
+class SegmentStore(PinnedLRU):
+    """Document-keyed, descriptor-indexed KV segments under one LRU budget.
+
+    Segments from *all* documents (tenants) share a single byte budget —
+    the serving analogue of the paper's storage/recomputation trade-off at
+    multi-query scale.  Each document gets its own :class:`DescriptorIndex`
+    so plans never cross documents, while eviction is global LRU (a cold
+    tenant's segments are reclaimed for a hot one).  Segments referenced by
+    an in-flight plan are protected via the inherited ``pinned`` context.
+    """
 
     def __init__(self, byte_budget: Optional[int] = None) -> None:
-        self.index = DescriptorIndex()
+        super().__init__()
+        self._indexes: dict[str, DescriptorIndex] = {}
         self._segs: dict[str, StoredSegment] = {}
         self._seq = 0
         self.byte_budget = byte_budget
         self.evictions = 0
+        self.evicted_bytes = 0
+        self.cross_session_hits = 0
 
-    def put(self, rng: Range, caches) -> str:
+    def index(self, doc_id: str = DEFAULT_DOC) -> DescriptorIndex:
+        if doc_id not in self._indexes:
+            self._indexes[doc_id] = DescriptorIndex()
+        return self._indexes[doc_id]
+
+    def doc_ids(self) -> list[str]:
+        return list(self._indexes)
+
+    def put(self, rng: Range, caches, *, doc_id: str = DEFAULT_DOC,
+            created_by: Optional[int] = None) -> str:
         self._seq += 1
-        sid = f"kv:{rng.lo}-{rng.hi}#{self._seq}"
-        self._segs[sid] = StoredSegment(sid, rng, caches)
-        self.index.add(sid, rng)
+        sid = f"kv:{doc_id}:{rng.lo}-{rng.hi}#{self._seq}"
+        self._segs[sid] = StoredSegment(sid, rng, caches, doc_id=doc_id,
+                                        created_by=created_by)
+        self.index(doc_id).add(sid, rng)
         self._maybe_evict()
         return sid
 
-    def get(self, sid: str) -> StoredSegment:
+    def get(self, sid: str, *, requester: Optional[int] = None) -> StoredSegment:
         seg = self._segs[sid]
         seg.last_used_s = time.time()
+        seg.hits += 1
+        if requester is not None and seg.created_by is not None \
+                and requester != seg.created_by:
+            seg.cross_session_hits += 1
+            self.cross_session_hits += 1
         return seg
 
-    def nbytes(self) -> int:
-        return sum(s.nbytes for s in self._segs.values())
+    def nbytes(self, doc_id: Optional[str] = None) -> int:
+        return sum(s.nbytes for s in self._segs.values()
+                   if doc_id is None or s.doc_id == doc_id)
 
     def __len__(self) -> int:
         return len(self._segs)
 
-    def segment_bytes(self) -> dict[str, int]:
-        return {sid: s.nbytes for sid, s in self._segs.items()}
+    def __contains__(self, sid: str) -> bool:
+        return sid in self._segs
 
-    def _maybe_evict(self) -> None:
-        if self.byte_budget is None:
-            return
-        while self.nbytes() > self.byte_budget and len(self._segs) > 1:
-            victim = min(self._segs.values(), key=lambda s: s.last_used_s)
-            del self._segs[victim.seg_id]
-            self.index.remove(victim.seg_id)
-            self.evictions += 1
+    def segment_bytes(self, doc_id: str = DEFAULT_DOC) -> dict[str, int]:
+        return {sid: s.nbytes for sid, s in self._segs.items()
+                if s.doc_id == doc_id}
+
+    def _entries(self) -> dict:
+        return self._segs
+
+    def _evict(self, victim: StoredSegment) -> None:
+        del self._segs[victim.seg_id]
+        idx = self._indexes[victim.doc_id]
+        idx.remove(victim.seg_id)
+        if len(idx) == 0:
+            # content-hashed doc_ids churn forever in a long-running server;
+            # drop emptied indexes so _indexes doesn't grow without bound
+            del self._indexes[victim.doc_id]
+        self.evicted_bytes += victim.nbytes

@@ -1,0 +1,336 @@
+"""Multi-session batched serving over a shared segment store.
+
+The ROADMAP's "heavy traffic" direction applied to the paper's machinery: a
+:class:`SessionManager` owns N active documents (tenants).  Each request's
+prefix is planned with the directed Dijkstra against the **shared**,
+document-keyed :class:`SegmentStore` — sessions over the same document hit
+each other's materialized segments (the compounding reuse F-IVM/LINVIEW
+observe for shared views), sessions over different documents stay isolated
+by construction (per-document descriptor indexes), and one global LRU byte
+budget arbitrates storage across all tenants.
+
+Decode is continuously batched: every scheduler step coalesces the ready
+sessions into one ``decode_step`` call, padding each cache to a shared
+bucketed capacity (``kernels.common.bucket_len``) and concatenating along
+the batch axis.  Per-row positions + the decode paths' position masks make
+ragged progress exact — a padded row attends only to its own ``pos``
+prefix, so batched outputs are bit-identical to single-session decode.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost import CostModel
+from repro.core.optimizer import Plan
+from repro.kernels.common import bucket_len
+
+from .engine import PrefixCacheBuilder, ServeStats
+from .kv_cache import SEQ_KEYS, SegmentStore, _leaf_key, cache_len, pad_cache
+
+
+def doc_key(doc_tokens: np.ndarray, extras: Optional[dict] = None) -> str:
+    """Content-derived document id: identical documents share segments.
+
+    ``extras`` (encoder features / image embeddings) condition the KV a
+    prefill produces — cross-attention constants are baked into cached
+    segments — so they are part of document identity: same tokens with
+    different extras must NOT share segments.
+    """
+    h = hashlib.sha1(np.ascontiguousarray(doc_tokens, np.int32).tobytes())
+    for k in sorted(extras or {}):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(extras[k]).tobytes())
+    return h.hexdigest()[:12]
+
+
+def batch_caches(caches_list: list) -> Any:
+    """Concatenate per-session caches ((L, 1, ...) leaves) along batch."""
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *caches_list)
+
+
+def split_caches(caches, n: int) -> list:
+    """Inverse of :func:`batch_caches`: per-row views of a batched cache."""
+    return [jax.tree.map(lambda x: x[:, i:i + 1], caches) for i in range(n)]
+
+
+def pad_cache_to(caches, target: int):
+    """Grow the sequence axis of SEQ leaves up to ``target`` capacity."""
+    cur = cache_len(caches)
+    if cur >= target:
+        return caches
+    return pad_cache(caches, target - cur)
+
+
+def batch_signature(caches) -> tuple:
+    """Shape key under which caches can be batched together.
+
+    Batch (axis 1) and the SEQ leaves' sequence axis (axis 2) are
+    normalized away — those are what padding/concat adjust; everything else
+    (tree structure, layer counts, head dims, context lengths, dtypes) must
+    match exactly.
+    """
+    leaves = jax.tree_util.tree_leaves_with_path(caches)
+    treedef = jax.tree_util.tree_structure(caches)
+    sig = []
+    for path, x in leaves:
+        key = _leaf_key(path)
+        shape = list(x.shape)
+        shape[1] = -1
+        if key in SEQ_KEYS:
+            shape[2] = -1
+        sig.append((key, tuple(shape), str(x.dtype)))
+    return (treedef, tuple(sig))
+
+
+@dataclass
+class Session:
+    sid: int
+    doc_id: str
+    doc: np.ndarray
+    extras: dict = field(default_factory=dict)
+    stats: ServeStats = field(default_factory=ServeStats)
+    # in-flight request state
+    caches: Any = None
+    logits: Any = None          # (1, V) distribution for the next token
+    pos: int = 0                # next decode position
+    capacity: int = 0           # required KV capacity (prefix + n_new)
+    remaining: int = 0
+    greedy: bool = True
+    key: Any = None
+    next_tok: int = -1
+    greedy_next: Optional[int] = None  # batched-argmax result from last decode
+    out_tokens: list = field(default_factory=list)
+    plans: list = field(default_factory=list)
+
+    @property
+    def busy(self) -> bool:
+        return self.remaining > 0
+
+
+@dataclass
+class SchedulerStats:
+    decode_calls: int = 0
+    decode_rows: int = 0
+    pack_rebuilds: int = 0
+
+    @property
+    def mean_batch(self) -> float:
+        return self.decode_rows / self.decode_calls if self.decode_calls else 0.0
+
+
+class SessionManager:
+    """N concurrent serving sessions over one model + one shared store."""
+
+    def __init__(self, model, params, *,
+                 chunk_tokens: int = 64,
+                 cost_model: Optional[CostModel] = None,
+                 byte_budget: Optional[int] = None,
+                 decode_bucket: int = 64,
+                 max_batch: int = 8) -> None:
+        self.model = model
+        self.params = params
+        self.store = SegmentStore(byte_budget=byte_budget)
+        self.builder = PrefixCacheBuilder(model, params, self.store,
+                                          chunk_tokens=chunk_tokens,
+                                          cost_model=cost_model)
+        self.decode_bucket = decode_bucket
+        self.max_batch = max_batch
+        # per-request counters live on each Session (folded into
+        # _closed_stats on close); the manager-level object only carries the
+        # shared batched-decode wall time.  aggregate_stats() is the
+        # authoritative combined view.
+        self.stats = ServeStats()
+        self.sched = SchedulerStats()
+        self._closed_stats = ServeStats()
+        self.sessions: dict[int, Session] = {}
+        self._next_sid = 0
+        self._jit_decode = jax.jit(model.decode_step)
+        # live decode packs: tuple(sids) -> batched caches (padded to a bucket)
+        self._packs: dict[tuple[int, ...], Any] = {}
+
+    # -- session lifecycle -------------------------------------------------
+    def add_session(self, doc_tokens: np.ndarray, *,
+                    doc_id: Optional[str] = None,
+                    extras: Optional[dict] = None) -> int:
+        doc = np.asarray(doc_tokens, np.int32)
+        sid = self._next_sid
+        self._next_sid += 1
+        self.sessions[sid] = Session(
+            sid=sid, doc_id=doc_id if doc_id is not None else doc_key(doc, extras),
+            doc=doc, extras=extras or {})
+        return sid
+
+    def close_session(self, sid: int) -> None:
+        self._flush_packs([g for g in self._packs if sid in g])
+        s = self.sessions.pop(sid, None)
+        if s is not None:
+            # fold the session's counters into the closed-session totals so
+            # aggregate_stats stays consistent after churn
+            _accumulate(self._closed_stats, s.stats)
+
+    # -- request admission -------------------------------------------------
+    def submit(self, sid: int, prefix_len: int, n_new: int, *,
+               greedy: bool = True, seed: int = 0) -> Plan:
+        """Plan + build the prefix for one request; decode happens in step()."""
+        s = self.sessions[sid]
+        if s.busy:
+            raise RuntimeError(f"session {sid} still has {s.remaining} tokens pending")
+        # a drained session's last pack can survive in _packs under the same
+        # group tuple (e.g. it was the only decoder); flush any pack holding
+        # this session so stale batched caches are never reused, while
+        # unrelated in-flight packs stay intact
+        self._flush_packs([g for g in self._packs if sid in g])
+        logits, caches, plan = self.builder.prefix_with_logits(
+            s.doc, prefix_len, doc_id=s.doc_id, extras=s.extras,
+            stats=s.stats, requester=sid)
+        s.caches = caches
+        s.logits = logits
+        s.greedy_next = None
+        s.pos = prefix_len
+        s.capacity = prefix_len + n_new
+        s.remaining = n_new
+        s.greedy = greedy
+        s.key = jax.random.PRNGKey(seed)
+        s.out_tokens = []
+        s.plans.append(plan)
+        s.stats.requests += 1
+        return plan
+
+    # -- scheduler ---------------------------------------------------------
+    def step(self) -> int:
+        """One scheduling round: sample a token for every ready session,
+        then coalesce the still-running ones into batched decode calls.
+        Returns the number of tokens produced (0 = idle)."""
+        ready = [s for s in self.sessions.values() if s.busy]
+        if not ready:
+            return 0
+        for s in ready:
+            self._sample(s)
+        decode_set = [s for s in ready if s.remaining > 0]
+        t0 = time.perf_counter()
+        for group in self._plan_groups(decode_set):
+            self._decode_group(group)
+        dt = time.perf_counter() - t0
+        self.stats.decode_s += dt
+        for s in decode_set:
+            s.stats.decode_s += dt / len(decode_set)
+        return len(ready)
+
+    def run(self) -> dict[int, list[int]]:
+        """Drain every pending request; returns {sid: generated tokens}."""
+        while self.step():
+            pass
+        self._release_idle()
+        return {sid: list(s.out_tokens) for sid, s in self.sessions.items()}
+
+    def _release_idle(self) -> None:
+        """Free decode-time device memory of drained sessions.
+
+        A finished request's per-session caches and its final pack rows are
+        never read again — the next submit replans the prefix from the
+        (store-resident) segments — so holding them would pin KV for idle
+        tenants indefinitely in a long-running server.
+        """
+        for g in [g for g in self._packs
+                  if all(sid not in self.sessions or not self.sessions[sid].busy
+                         for sid in g)]:
+            del self._packs[g]
+        for s in self.sessions.values():
+            if not s.busy:
+                s.caches = None
+                s.logits = None
+                s.greedy_next = None
+
+    # -- internals ---------------------------------------------------------
+    def _sample(self, s: Session) -> None:
+        if s.greedy and s.greedy_next is not None:
+            tok = s.greedy_next  # batched argmax from the last decode call
+        elif s.greedy:
+            tok = int(jnp.argmax(s.logits, axis=-1)[0])
+        else:
+            s.key, sub = jax.random.split(s.key)
+            tok = int(jax.random.categorical(sub, s.logits).astype(jnp.int32)[0])
+        s.greedy_next = None
+        s.next_tok = tok
+        s.out_tokens.append(tok)
+        s.remaining -= 1
+        s.stats.tokens_decoded += 1
+
+    def _plan_groups(self, decode_set: list) -> list[tuple[int, ...]]:
+        """Partition ready sessions into batchable groups of ≤ max_batch."""
+        by_sig: dict[tuple, list] = {}
+        for s in sorted(decode_set, key=lambda s: s.sid):
+            by_sig.setdefault(batch_signature(s.caches), []).append(s)
+        groups: list[tuple[int, ...]] = []
+        for members in by_sig.values():
+            for i in range(0, len(members), self.max_batch):
+                groups.append(tuple(s.sid for s in members[i:i + self.max_batch]))
+        # groups partition the decode set, so an unchanged tuple keeps its
+        # pack as-is; only stale packs are split back and new ones built
+        new_set = set(groups)
+        stale = [g for g in self._packs if g not in new_set]
+        if stale:
+            self._flush_packs(stale)
+        for g in groups:
+            if g not in self._packs:
+                self._build_pack(g)
+        return groups
+
+    def _build_pack(self, group: tuple[int, ...]) -> None:
+        sess = [self.sessions[sid] for sid in group]
+        target = max(max(s.capacity, cache_len(s.caches)) for s in sess)
+        cap = bucket_len(target, self.decode_bucket)
+        self._packs[group] = batch_caches([pad_cache_to(s.caches, cap) for s in sess])
+        self.sched.pack_rebuilds += 1
+
+    def _flush_packs(self, groups: Optional[list] = None) -> None:
+        """Write batched caches back into their sessions (pre-regroup)."""
+        targets = list(self._packs) if groups is None else list(groups)
+        for group in targets:
+            rows = split_caches(self._packs[group], len(group))
+            for sid, row in zip(group, rows):
+                if sid in self.sessions:
+                    self.sessions[sid].caches = row
+            del self._packs[group]
+
+    def _decode_group(self, group: tuple[int, ...]) -> None:
+        sess = [self.sessions[sid] for sid in group]
+        caches = self._packs[group]
+        toks = jnp.asarray([[s.next_tok] for s in sess], jnp.int32)
+        pos = jnp.asarray([s.pos for s in sess], jnp.int32)
+        logits, caches = self._jit_decode(self.params, caches, toks, pos)
+        self._packs[group] = caches
+        # one host sync for the whole batch; greedy sessions sample from this
+        greedy_toks = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, s in enumerate(sess):
+            s.logits = logits[i:i + 1]
+            s.greedy_next = int(greedy_toks[i])
+            s.pos += 1
+        self.sched.decode_calls += 1
+        self.sched.decode_rows += len(group)
+
+    # -- reporting ---------------------------------------------------------
+    def aggregate_stats(self) -> ServeStats:
+        """Sum of per-session stats (live and closed) plus decode time."""
+        agg = ServeStats()
+        _accumulate(agg, self._closed_stats)
+        for s in self.sessions.values():
+            _accumulate(agg, s.stats)
+        agg.decode_s = self.stats.decode_s
+        return agg
+
+
+def _accumulate(into: ServeStats, src: ServeStats) -> None:
+    into.requests += src.requests
+    into.tokens_reused += src.tokens_reused
+    into.tokens_computed += src.tokens_computed
+    into.tokens_decoded += src.tokens_decoded
+    into.planner_s += src.planner_s
+    into.prefill_s += src.prefill_s

@@ -1,0 +1,111 @@
+"""Deterministic stand-in for ``hypothesis`` when the package is absent.
+
+The property-test modules only use a small strategy surface
+(``integers``/``tuples``/``lists``/``.map``) plus ``@given``/``@settings``.
+This shim replays each test over a fixed, seeded stream of examples so the
+assertions still execute as plain example-based tests; it is installed into
+``sys.modules`` by ``conftest.py`` only when the real package is missing.
+
+It is *not* a property-testing engine: no shrinking, no coverage-guided
+search, and the example count is capped (HYP_STUB_MAX_EXAMPLES, default 25)
+to keep the suite fast.  Install the real thing with
+``pip install .[test]`` for full fuzzing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import sys
+import types
+
+_SEED = 0xC0FFEE
+_CAP = int(os.environ.get("HYP_STUB_MAX_EXAMPLES", "25"))
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def map(self, f):
+        return _Strategy(lambda rnd: f(self._draw(rnd)))
+
+
+def integers(min_value=0, max_value=1_000_000):
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def tuples(*strats):
+    return _Strategy(lambda rnd: tuple(s.draw(rnd) for s in strats))
+
+
+def lists(elements, *, min_size=0, max_size=10):
+    return _Strategy(
+        lambda rnd: [elements.draw(rnd) for _ in range(rnd.randint(min_size, max_size))]
+    )
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+
+def booleans():
+    return _Strategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        # positional strategies bind to the *rightmost* parameters (hypothesis
+        # semantics); anything to their left is a pytest fixture.
+        n_fixture = len(params) - len(strats) - len(kw_strats)
+        fixture_params = [p for p in params[:n_fixture] if p.name not in kw_strats]
+        drawn_names = [p.name for p in params[n_fixture:len(params) - len(kw_strats)]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(fn, "_stub_max_examples", 20), _CAP)
+            rnd = random.Random(_SEED)
+            for _ in range(max(n, 1)):
+                drawn = {name: s.draw(rnd) for name, s in zip(drawn_names, strats)}
+                kw_drawn = {k: s.draw(rnd) for k, s in kw_strats.items()}
+                fn(*args, **kwargs, **drawn, **kw_drawn)
+
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register stub ``hypothesis`` / ``hypothesis.strategies`` modules."""
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "tuples", "lists", "sampled_from", "booleans", "floats"):
+        setattr(st, name, globals()[name])
+    hyp.strategies = st
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    hyp.__stub__ = True
+    hyp.__version__ = "0.0-stub"
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

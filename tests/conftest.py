@@ -7,3 +7,17 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
+
+HERE = Path(__file__).resolve().parent
+if str(HERE) not in sys.path:
+    sys.path.insert(0, str(HERE))
+
+# Property-test modules import hypothesis at collection time.  When the
+# package is missing, install the deterministic fallback (same assertions,
+# fixed example stream) instead of erroring out of collection.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from _hypothesis_fallback import install
+
+    install()

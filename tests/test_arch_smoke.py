@@ -11,6 +11,9 @@ from repro.models.lm import LM
 from repro.train.loop import make_train_step
 from repro.train.optim import make_optimizer
 
+# whole-arch-matrix compile sweep: excluded from scripts/test_fast.sh
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

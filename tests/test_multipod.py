@@ -6,6 +6,11 @@ import sys
 import textwrap
 from pathlib import Path
 
+import pytest
+
+# 8-virtual-device training subprocess: excluded from scripts/test_fast.sh
+pytestmark = pytest.mark.slow
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 SCRIPT = textwrap.dedent("""

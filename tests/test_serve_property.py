@@ -6,6 +6,9 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+# end-to-end generate sweep (~30s): excluded from scripts/test_fast.sh
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCHS, reduced
 from repro.models.lm import LM
 from repro.serve.engine import ServeEngine
