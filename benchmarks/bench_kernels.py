@@ -60,6 +60,35 @@ def main() -> None:
     t = _bench(lambda: jax.block_until_ready(f(Z)))
     emit("kernel_ztz_xla_host_4k", t * 1e6, f"flops_per_s={2*4096*11*11/t:.2e}")
 
+    # extend-attention: the prefill_extend hot path.  Kernel vs the pure-JAX
+    # blocked-softmax route over the same bucket-padded cache — on CPU the
+    # kernel runs in interpret mode (correctness harness, not a TPU timing),
+    # so "speedup" here is only meaningful when backend == tpu.
+    from repro.kernels.extend_attention import ops as ext_ops
+    from repro.models.attention import blocked_attention
+
+    b, nb, h, hd, cap, t_real = 1, 128, 8, 64, 2048, 1536
+    r2 = np.random.default_rng(1)
+    q = jnp.asarray(r2.standard_normal((b, nb, h, hd)), jnp.float32)
+    kc = jnp.asarray(r2.standard_normal((b, cap, h, hd)), jnp.float32)
+    vc = jnp.asarray(r2.standard_normal((b, cap, h, hd)), jnp.float32)
+    q_pos = jnp.broadcast_to(t_real - nb + jnp.arange(nb)[None], (b, nb))
+    k_pos = jnp.broadcast_to(jnp.arange(cap)[None], (b, cap))
+
+    f_blk = jax.jit(lambda q, k, v: blocked_attention(
+        q, k, v, q_pos, k_pos, causal=True))
+    t_blk = _bench(lambda: jax.block_until_ready(f_blk(q, kc, vc)))
+    emit("kernel_extend_blocked_xla_2k", t_blk * 1e6,
+         f"tok_per_s={nb/t_blk:.2e}")
+
+    f_ker = jax.jit(lambda q, k, v, t: ext_ops.extend_attention(
+        q, k, v, t_real=t))
+    t_ker = _bench(lambda: jax.block_until_ready(
+        f_ker(q, kc, vc, jnp.int32(t_real))))
+    mode = "compiled" if jax.default_backend() == "tpu" else "interpret"
+    emit("kernel_extend_pallas_2k", t_ker * 1e6,
+         f"mode={mode};speedup_vs_blocked={t_blk/t_ker:.2f}x")
+
 
 if __name__ == "__main__":
     main()

@@ -33,19 +33,25 @@ def single_session() -> None:
     doc = np.random.default_rng(0).integers(0, cfg.vocab_size, 2048).astype(np.int32)
 
     eng = ServeEngine(model, params, doc, chunk_tokens=128)
-    # warm pass (also pays all jit compiles)
+    # warm pass (also pays all jit compiles — bounded by the bucket count
+    # on the shape-stable extend path, not by the chunk count)
     t0 = time.perf_counter()
     eng.build_prefix(1024)
     t_cold = time.perf_counter() - t0
+    cold_lowerings = eng.builder.extend_lowerings
 
     # steady-state: repeated/extended requests hit cached segments
     reqs = [1024, 1536, 1280, 2047, 1792]
+    computed0, prefill_s0 = eng.stats.tokens_computed, eng.stats.prefill_s
     t_warm_total = 0.0
     for L in reqs:
         t0 = time.perf_counter()
         eng.build_prefix(L)
         t_warm_total += time.perf_counter() - t0
     t_warm = t_warm_total / len(reqs)
+    computed = eng.stats.tokens_computed - computed0
+    prefill_s = eng.stats.prefill_s - prefill_s0
+    prefill_tok_s = computed / prefill_s if prefill_s > 0 else float("inf")
 
     # from-scratch reference for the same requests (jit already warm)
     t_base_total = 0.0
@@ -57,7 +63,10 @@ def single_session() -> None:
     emit("serve_prefix_reuse", t_warm * 1e6,
          f"speedup_vs_scratch={t_base / t_warm:.2f}x;"
          f"reuse_frac={eng.stats.reuse_frac:.2f};"
-         f"store_segments={len(eng.store)}")
+         f"store_segments={len(eng.store)};"
+         f"prefill_tok_per_s={prefill_tok_s:.1f};"
+         f"lowerings_cold={cold_lowerings};"
+         f"lowerings_total={eng.builder.extend_lowerings}")
 
 
 def multi_session(n_sessions: int = 6, n_shared: int = 3, doc_len: int = 768,
@@ -113,6 +122,8 @@ def multi_session(n_sessions: int = 6, n_shared: int = 3, doc_len: int = 768,
     reuse_frac = reused / max(reused + computed, 1)
     calls = mgr.sched.decode_calls - warm_calls
     mean_batch = (mgr.sched.decode_rows - warm_rows) / max(calls, 1)
+    prefill_tok_s = (agg.tokens_computed / agg.prefill_s
+                     if agg.prefill_s > 0 else float("inf"))
     assert reuse_frac > 0, "multi-session run produced no reuse"
     assert st.cross_session_hits > 0, "no cross-session segment sharing"
     emit("serve_multi_session", wall * 1e6 / max(n_plans, 1),
@@ -121,7 +132,9 @@ def multi_session(n_sessions: int = 6, n_shared: int = 3, doc_len: int = 768,
          f"cross_session_hits={st.cross_session_hits};"
          f"evictions={st.evictions};"
          f"segments={len(st)};"
-         f"mean_batch={mean_batch:.2f}")
+         f"mean_batch={mean_batch:.2f};"
+         f"prefill_tok_per_s={prefill_tok_s:.1f};"
+         f"lowerings={mgr.builder.extend_lowerings}")
 
 
 def main() -> None:

@@ -71,5 +71,15 @@ def timed(fn, *args, **kw):
     return out, time.perf_counter() - t0
 
 
+#: every emit() lands here too; benchmarks.run serializes the collected
+#: records to BENCH_serve.json so the perf trajectory is machine-readable
+RECORDS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    rec = {"name": name, "us_per_call": round(us_per_call, 1), "derived": {}}
+    for part in filter(None, derived.split(";")):
+        k, _, val = part.partition("=")
+        rec["derived"][k] = val
+    RECORDS.append(rec)
     print(f"{name},{us_per_call:.1f},{derived}")

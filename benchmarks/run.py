@@ -1,10 +1,16 @@
 """Benchmark runner — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Modules scale the paper's 5M-row
-setting to CPU-minutes while preserving every size ratio (see common.py).
+Prints ``name,us_per_call,derived`` CSV and writes every collected record
+to ``BENCH_serve.json`` at the repo root (machine-readable perf
+trajectory; regenerated on each run, keyed by benchmark name).  Modules
+scale the paper's 5M-row setting to CPU-minutes while preserving every
+size ratio (see common.py).
 """
 from __future__ import annotations
 
+import json
+import pathlib
+import platform
 import sys
 import time
 import traceback
@@ -22,6 +28,38 @@ MODULES = [
 ]
 
 
+def _write_records() -> None:
+    from benchmarks import common
+
+    if not common.RECORDS:
+        return
+    import jax
+
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    # merge by benchmark name so a filtered run (e.g. `run serve_reuse`)
+    # refreshes only its own records and the rest of the trajectory
+    # survives; provenance (backend/time) is stamped per record, since
+    # retained records may come from a different host or backend
+    merged: dict[str, dict] = {}
+    if path.exists():
+        try:
+            for rec in json.loads(path.read_text()).get("records", []):
+                merged[rec["name"]] = rec
+        except (json.JSONDecodeError, KeyError, TypeError):
+            pass                        # corrupt file: rebuild from this run
+    stamp = {
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "unix_s": int(time.time()),
+    }
+    for rec in common.RECORDS:
+        merged[rec["name"]] = {**rec, **stamp}
+    doc = {"schema": 1, "records": list(merged.values())}
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"# wrote {len(common.RECORDS)} records "
+          f"({len(merged)} total) to {path.name}")
+
+
 def main() -> None:
     only = sys.argv[1:] if len(sys.argv) > 1 else None
     failures = 0
@@ -37,6 +75,7 @@ def main() -> None:
             failures += 1
             print(f"# {mod_name} FAILED")
             traceback.print_exc()
+    _write_records()
     if failures:
         raise SystemExit(1)
 

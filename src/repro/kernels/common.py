@@ -1,5 +1,7 @@
-"""Shared kernel utilities: padding, interpret-mode detection."""
+"""Shared kernel utilities: padding, interpret-mode detection, routing."""
 from __future__ import annotations
+
+import os
 
 import jax
 import numpy as np
@@ -8,6 +10,27 @@ import numpy as np
 def use_interpret() -> bool:
     """Pallas interpret mode everywhere except a real TPU backend."""
     return jax.default_backend() != "tpu"
+
+
+def extend_kernel_mode() -> str:
+    """How ``prefill_extend`` runs its suffix attention: 'kernel' | 'jax'.
+
+    'kernel' routes through ``kernels/extend_attention`` (Pallas; interpret
+    mode off-TPU), 'jax' uses the pure-JAX blocked-softmax path.  Default is
+    kernel on TPU and blocked elsewhere; ``REPRO_EXTEND_KERNEL=1/0``
+    overrides (1 on CPU runs the kernel in interpret mode — the parity
+    harness, ~100× slower than XLA).
+
+    The mode is read at jit *trace* time: set the env var before building
+    an engine/builder.  Flipping it later in the same process does not
+    re-route executables already cached for a shape.
+    """
+    env = os.environ.get("REPRO_EXTEND_KERNEL", "auto").strip().lower()
+    if env in ("1", "on", "true", "kernel"):
+        return "kernel"
+    if env in ("0", "off", "false", "jax", "blocked"):
+        return "jax"
+    return "kernel" if jax.default_backend() == "tpu" else "jax"
 
 
 def round_up(x: int, m: int) -> int:

@@ -11,7 +11,11 @@ prefix with an uncovered chunk: the chunk's q rows attend over
     ``chunk``-sized VMEM tiles with online softmax (m, l, acc carries in
     registers/VMEM — nothing quadratic is ever materialized);
   * the causal boundary only affects the trailing ``nb`` positions, so all
-    fully-cached tiles run mask-free on the MXU.
+    fully-cached tiles run mask-free on the MXU;
+  * ``t_real`` — the valid KV length — is a **runtime scalar** (SMEM via
+    scalar prefetch), so one compiled executable serves every chunk of a
+    bucket-padded cache: the caller pads KV to a fixed capacity and only
+    the mask moves between calls.
 """
 from __future__ import annotations
 
@@ -20,25 +24,34 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import pad_axis, round_up
 
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, *, t_real: int, chunk: int):
-    nb, hd = q_ref.shape[1], q_ref.shape[2]
+def _kernel(t_ref, q_ref, k_ref, v_ref, o_ref, *, chunk: int, groups: int):
+    rows, hd = q_ref.shape[1], q_ref.shape[2]
+    nb = rows // groups              # q rows per sequence position
+    hd_v = v_ref.shape[2]
     t_pad = k_ref.shape[1]
     n_chunks = t_pad // chunk
+    t_real = t_ref[0]                                    # runtime valid length
 
-    q = q_ref[0].astype(jnp.float32) * (hd ** -0.5)      # (nb, hd) in VMEM
-    q_pos = (t_real - nb) + jax.lax.broadcasted_iota(jnp.int32, (nb, chunk), 0)
+    q = q_ref[0].astype(jnp.float32) * (hd ** -0.5)      # (rows, hd) in VMEM
+    # GQA: the stream carries all `groups` query heads of one KV head,
+    # stacked as row r = g·nb + i — so row r's sequence position is r mod nb
+    row = jax.lax.broadcasted_iota(jnp.int32, (rows, chunk), 0)
+    q_pos = (t_real - nb) + (row % nb if groups > 1 else row)
 
     def body(i, carry):
         m, l, acc = carry
         kc = k_ref[0, pl.dslice(i * chunk, chunk), :].astype(jnp.float32)
         vc = v_ref[0, pl.dslice(i * chunk, chunk), :].astype(jnp.float32)
         sc = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
-                                 preferred_element_type=jnp.float32)  # (nb, chunk)
-        k_pos = i * chunk + jax.lax.broadcasted_iota(jnp.int32, (nb, chunk), 1)
+                                 preferred_element_type=jnp.float32)  # (rows, chunk)
+        k_pos = i * chunk + jax.lax.broadcasted_iota(jnp.int32, (rows, chunk), 1)
         valid = (k_pos <= q_pos) & (k_pos < t_real)
         sc = jnp.where(valid, sc, NEG_INF)
         m_new = jnp.maximum(m, sc.max(-1))
@@ -49,30 +62,52 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, t_real: int, chunk: int):
                                  preferred_element_type=jnp.float32)
         return (m_new, l_new, acc * corr[:, None] + pv)
 
-    m0 = jnp.full((nb,), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((nb,), jnp.float32)
-    a0 = jnp.zeros((nb, hd), jnp.float32)
+    m0 = jnp.full((rows,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((rows,), jnp.float32)
+    a0 = jnp.zeros((rows, hd_v), jnp.float32)
     m, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, a0))
     o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("t_real", "chunk", "interpret"))
-def extend_attention_streams(q, k, v, *, t_real: int, chunk: int = 512,
-                             interpret: bool = False):
-    """Per-stream suffix attention.  q (S, nb, hd); k/v (S, T_pad, hd)."""
-    s, nb, hd = q.shape
-    t_pad = k.shape[1]
-    assert t_pad % chunk == 0, (t_pad, chunk)
-    kern = functools.partial(_kernel, t_real=t_real, chunk=chunk)
-    return pl.pallas_call(
-        kern,
+@functools.partial(jax.jit, static_argnames=("chunk", "groups", "interpret"))
+def extend_attention_streams(q, k, v, *, t_real, chunk: int = 512,
+                             groups: int = 1, interpret: bool = False):
+    """Per-stream suffix attention.  q (S, G·nb, hd); k/v (S, T, hd[_v]).
+
+    ``t_real`` is the valid KV length — an int or a traced int32 scalar;
+    positions ≥ ``t_real`` are masked, so ``k``/``v`` may carry arbitrary
+    padding.  KV is padded internally to a ``chunk`` multiple and ``chunk``
+    auto-shrinks when the stream is shorter than one tile, so any cache
+    length is accepted.
+
+    ``groups`` > 1 is the GQA layout: one stream carries all G query heads
+    of a single KV head, stacked along the q-row axis (row g·nb + i is head
+    g at sequence position i) — the KV stream is read once per *group*
+    instead of once per query head, preserving blocked_attention's 1/G KV
+    memory-traffic saving on the kernel path.
+    """
+    s, rows, hd = q.shape
+    t = k.shape[1]
+    hd_v = v.shape[2]
+    chunk = min(chunk, round_up(t, 8))                   # auto-shrink for short KV
+    t_pad = round_up(t, chunk)
+    if t_pad != t:                                       # mask covers the pad
+        k = pad_axis(k, 1, t_pad)
+        v = pad_axis(v, 1, t_pad)
+    kern = functools.partial(_kernel, chunk=chunk, groups=groups)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                           # t_real rides in SMEM
         grid=(s,),
         in_specs=[
-            pl.BlockSpec((1, nb, hd), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, t_pad, hd), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, t_pad, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, rows, hd), lambda i, t: (i, 0, 0)),
+            pl.BlockSpec((1, t_pad, hd), lambda i, t: (i, 0, 0)),
+            pl.BlockSpec((1, t_pad, hd_v), lambda i, t: (i, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, nb, hd), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((s, nb, hd), q.dtype),
+        out_specs=pl.BlockSpec((1, rows, hd_v), lambda i, t: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, rows, hd_v), q.dtype),
         interpret=interpret,
-    )(q, k, v)
+    )(jnp.asarray(t_real, jnp.int32).reshape(1), q, k, v)

@@ -1,25 +1,33 @@
 """Pure-jnp oracle for the suffix (extend) attention kernel.
 
-Semantics: q holds the *last* ``nb`` positions of a length-``T`` stream;
-kv covers all ``T`` positions.  Causal: q at global position
-``T − nb + i`` attends to kv positions ``≤ T − nb + i``.
+Semantics: q holds the *last* ``nb`` positions of a length-``t_real``
+stream; kv covers at least ``t_real`` positions (anything beyond is
+padding and ignored).  Causal: q at global position ``t_real − nb + i``
+attends to kv positions ``≤ t_real − nb + i``.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def extend_attention_ref(q, k, v):
-    """q (B, nb, H, hd); k/v (B, T, H, hd) → (B, nb, H, hd), fp32 math."""
+def extend_attention_ref(q, k, v, *, t_real=None):
+    """q (B, nb, H, hd); k/v (B, T, H, hd[_v]) → (B, nb, H, hd_v), fp32 math.
+
+    ``t_real`` (default: the full KV length) marks the valid KV prefix —
+    positions ≥ ``t_real`` are masked out, mirroring the kernel's handling
+    of bucket-padded caches.
+    """
     b, nb, h, hd = q.shape
     t = k.shape[1]
+    if t_real is None:
+        t_real = t
     qf = q.astype(jnp.float32)
     kf = k.astype(jnp.float32)
     vf = v.astype(jnp.float32)
     sc = jnp.einsum("bqhd,bthd->bhqt", qf, kf) * (hd ** -0.5)
-    q_pos = t - nb + jnp.arange(nb)
+    q_pos = t_real - nb + jnp.arange(nb)
     k_pos = jnp.arange(t)
-    mask = q_pos[:, None] >= k_pos[None, :]
+    mask = (q_pos[:, None] >= k_pos[None, :]) & (k_pos[None, :] < t_real)
     sc = jnp.where(mask[None, None], sc, -jnp.inf)
     p = jnp.exp(sc - sc.max(-1, keepdims=True))
     p = p / p.sum(-1, keepdims=True)

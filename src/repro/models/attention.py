@@ -102,6 +102,51 @@ def blocked_attention(q, k, v, q_pos, k_pos, *, causal: bool, block: int = 512):
     return out.astype(q.dtype)
 
 
+def seq_update(cache, new, start):
+    """Write ``new`` into ``cache`` along the sequence axis (1) at ``start``.
+
+    ``start`` may be a traced int32 scalar — this is what keeps the
+    bucket-padded extend path shape-stable (the cache capacity, not the
+    logical length, is the only shape XLA sees).
+    """
+    idx = (0, start) + (0,) * (cache.ndim - 2)
+    return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), idx)
+
+
+def extend_attention_cached(p: AttnParams, h, cache_k, cache_v, positions,
+                            start, *, theta: float, block: int = 512):
+    """Extend-path self-attention over a capacity-padded KV cache.
+
+    h (B, nb, d) is the chunk's normed hidden state; cache_k/v (B, cap, KV,
+    hd) hold valid KV for [0, start).  The chunk's K/V are written at
+    [start, start+nb) and its queries attend causally over the result;
+    anything beyond start+nb is garbage but sits at positions the causal
+    mask excludes.  ``start`` may be traced, so one executable per cache
+    bucket serves every chunk of every request.
+
+    Returns (projected out, (cache_k, cache_v)) like :func:`self_attention`.
+    On TPU (or with REPRO_EXTEND_KERNEL=1) the score/softmax/weighted-sum
+    runs in the Pallas extend kernel; otherwise the blocked-softmax path.
+    """
+    from repro.kernels.common import extend_kernel_mode
+
+    b, nb = h.shape[:2]
+    q, k_new, v_new = _project_qkv(p, h, h, positions, positions, theta)
+    cache_k = seq_update(cache_k, k_new, start)
+    cache_v = seq_update(cache_v, v_new, start)
+    if extend_kernel_mode() == "kernel":
+        from repro.kernels.extend_attention import ops as extend_ops
+
+        out = extend_ops.extend_attention(q, cache_k, cache_v,
+                                          t_real=start + nb)
+    else:
+        cap = cache_k.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(cap)[None], (b, cap))
+        out = blocked_attention(q, cache_k, cache_v, positions, k_pos,
+                                causal=True, block=block)
+    return proj_out(out, p.wo), (cache_k, cache_v)
+
+
 def expand_kv_heads(k, n_heads: int):
     """Repeat KV heads up to the q-head count (TP-alignment; KV replicated)."""
     kv = k.shape[2]

@@ -17,6 +17,29 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# ---------------------------------------------------------------------------
+# cache-leaf taxonomy — the single source of truth for what each entry of a
+# serving cache tree *is*.  The model creates these entries
+# (LM._prefill_cache) and the serve layer slices/concats/stores them
+# (repro.serve.kv_cache re-exports these under its own names).
+# ---------------------------------------------------------------------------
+
+#: entries whose trailing-from-batch axis is the document/sequence axis
+CACHE_SEQ_KEYS = ("k", "v", "c_kv", "k_rope")
+#: entries holding running state (SSD conv/ssm; kept only at segment end)
+CACHE_STATE_KEYS = ("conv", "ssm")
+#: entries constant across the document (cross-attention context K/V)
+CACHE_CONST_KEYS = ("ck", "cv")
+
+
+def cache_leaf_key(path) -> Optional[str]:
+    """Innermost dict key of a cache-tree leaf path ("k", "ssm", …)."""
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return p.key
+    return None
+
+
 @dataclass(frozen=True)
 class ParamSpec:
     shape: tuple[int, ...]

@@ -26,7 +26,8 @@ from . import attention as attn
 from . import mla as mla_mod
 from . import moe as moe_mod
 from . import ssd as ssd_mod
-from .common import ParamSpec, dense, init_params, proj_heads, proj_out, rms_norm, spec_map
+from .common import (CACHE_STATE_KEYS, ParamSpec, cache_leaf_key, dense,
+                     init_params, rms_norm, spec_map)
 
 
 @dataclass(frozen=True)
@@ -433,14 +434,20 @@ class LM:
             entry["ck"], entry["cv"] = ck, cv
         return entry
 
-    def prefill_extend(self, params, caches, tokens, start: int):
-        """Extend an existing cache with a block of tokens.
+    def prefill_extend(self, params, caches, tokens, start):
+        """Extend a capacity-padded cache with a block of tokens.
 
-        The serving engine's gap-filler: given caches covering document
-        positions [0, start), process ``tokens`` (B, nb) at positions
-        [start, start+nb) and return (last-position logits, caches
-        covering [0, start+nb)).  SSD layers resume from their final
-        (conv, ssm) states; attention/MLA layers attend over prefix+block.
+        The serving engine's gap-filler: given caches whose sequence axis
+        is padded to some capacity ``cap`` and holds valid state for
+        [0, start), process ``tokens`` (B, nb) at positions
+        [start, start+nb) — writing their KV in place — and return
+        (last-position logits, caches of the same capacity now valid to
+        start+nb).  ``start`` is a *traced* int32 scalar, so one compiled
+        executable per (cap, nb) serves every chunk of every request;
+        positions ≥ start+nb hold garbage that the causal mask excludes.
+        SSD layers resume from their final (conv, ssm) states;
+        attention/MLA layers attend over prefix+block.  ``cap`` must be
+        ≥ start+nb (the caller buckets it).
         """
         cfg = self.cfg
         b, nb = tokens.shape
@@ -466,9 +473,53 @@ class LM:
         logits = self.logits(params, hidden[:, -1:, :])[:, 0]
         return logits, new_caches
 
+    def prefill_extend_many(self, params, caches, tokens, start, n_chunks):
+        """Fused multi-chunk extend: one dispatch fills a whole plan gap.
+
+        tokens (B, n_slots, chunk) is a fixed-slot chunk buffer; slots
+        i < ``n_chunks`` (traced) hold real document chunks starting at
+        ``start + i·chunk``, later slots are padding and never touched —
+        the loop is a dynamic-trip-count ``fori_loop``, so the executable
+        depends only on (cache capacity, n_slots, chunk) and is shared by
+        every gap of every request in the same bucket.
+
+        Returns (logits of the last processed chunk's final position,
+        caches, chunk_states) where ``chunk_states`` mirrors the cache
+        tree with each running-state leaf ("conv"/"ssm") stacked to
+        (n_slots, …) — the state *at the end of each chunk*, which is
+        what per-chunk segment materialization needs (a chunk's stored
+        SSD state must be the state at its own boundary, not at gap end).
+        """
+        b, n_slots, chunk = tokens.shape
+
+        def snap_init(path, x):
+            if cache_leaf_key(path) in CACHE_STATE_KEYS:
+                return jnp.zeros((n_slots,) + x.shape, x.dtype)
+            return jnp.zeros((0,), x.dtype)
+
+        def snap_write(i, snap, caches):
+            def f(path, s, x):
+                if cache_leaf_key(path) in CACHE_STATE_KEYS:
+                    idx = (i,) + (0,) * x.ndim
+                    return jax.lax.dynamic_update_slice(s, x[None], idx)
+                return s
+            return jax.tree_util.tree_map_with_path(f, snap, caches)
+
+        def body(i, carry):
+            caches, snap, _ = carry
+            toks = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)[:, 0]
+            logits, caches = self.prefill_extend(params, caches, toks,
+                                                 start + i * chunk)
+            return (caches, snap_write(i, snap, caches), logits)
+
+        snap0 = jax.tree_util.tree_map_with_path(snap_init, caches)
+        logits0 = jnp.zeros((b, self.cfg.vocab_size), self.compute_dtype)
+        caches, snap, logits = jax.lax.fori_loop(
+            0, n_chunks, body, (caches, snap0, logits0))
+        return logits, caches, snap
+
     def _extend_layer(self, spec: LayerSpec, p, cache, x, positions, start):
         cfg = self.cfg
-        b, nb = x.shape[:2]
         h = rms_norm(x.astype(self.compute_dtype), p["ln1"], cfg.norm_eps)
         out_cache = dict(cache)
         if spec.mixer == "ssd":
@@ -478,35 +529,15 @@ class LM:
                 initial=(cache["conv"], cache["ssm"]))
             out_cache["conv"], out_cache["ssm"] = st
         elif spec.mixer == "mla":
-            ap = _as_mla_params(p["mixer"])
-            q_nope, q_rope = mla_mod._queries(ap, cfg.mla, h, positions, cfg.rope_theta)
-            c_new, kr_new = mla_mod._latent(ap, cfg.mla, h, positions, cfg.rope_theta)
-            c_kv = jnp.concatenate([cache["c_kv"], c_new], axis=1)
-            k_rope = jnp.concatenate([cache["k_rope"], kr_new], axis=1)
-            t = c_kv.shape[1]
-            k_nope = proj_heads(c_kv, ap.w_uk)
-            v = proj_heads(c_kv, ap.w_uv)
-            q = jnp.concatenate([q_nope, q_rope], axis=-1)
-            k = jnp.concatenate(
-                [k_nope,
-                 jnp.broadcast_to(k_rope[:, :, None, :],
-                                  (*k_nope.shape[:3], cfg.mla.qk_rope_head_dim))],
-                axis=-1)
-            k_pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
-            mixed = attn.blocked_attention(q, k, v, positions, k_pos, causal=True)
-            mixed = proj_out(mixed, ap.w_o)
+            mixed, (c_kv, k_rope) = mla_mod.mla_extend(
+                _as_mla_params(p["mixer"]), cfg.mla, h, cache["c_kv"],
+                cache["k_rope"], positions, start, theta=cfg.rope_theta,
+                block=cfg.attn_block)
             out_cache["c_kv"], out_cache["k_rope"] = c_kv, k_rope
         else:
-            ap = _as_attn_params(p["mixer"])
-            q, k_new, v_new = attn._project_qkv(
-                ap, h, h, positions, positions, cfg.rope_theta)
-            k_full = jnp.concatenate([cache["k"], k_new], axis=1)
-            v_full = jnp.concatenate([cache["v"], v_new], axis=1)
-            t = k_full.shape[1]
-            k_pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
-            mixed = attn.blocked_attention(q, k_full, v_full, positions, k_pos,
-                                           causal=True)
-            mixed = proj_out(mixed, ap.wo)
+            mixed, (k_full, v_full) = attn.extend_attention_cached(
+                _as_attn_params(p["mixer"]), h, cache["k"], cache["v"],
+                positions, start, theta=cfg.rope_theta, block=cfg.attn_block)
             out_cache["k"], out_cache["v"] = k_full, v_full
         x = x + mixed.astype(x.dtype)
         if spec.cross:

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import MLAConfig
 
-from .attention import NEG_INF, blocked_attention
+from .attention import NEG_INF, blocked_attention, seq_update
 from .common import apply_rope, dense, proj_heads, proj_out, rms_norm, rope_angles
 
 
@@ -66,6 +66,47 @@ def mla_self_attention(p: MLAParams, m: MLAConfig, x, positions, *, theta: float
     # blocked_attention scales by packed dim^-0.5; MLA wants (nope+rope)^-0.5 — equal here
     out = blocked_attention(q, k, v, positions, positions, causal=True, block=block)
     return proj_out(out, p.w_o), (c_kv, k_rope)
+
+
+def mla_extend(p: MLAParams, m: MLAConfig, h, cache_ckv, cache_krope,
+               positions, start, *, theta: float, block: int = 512):
+    """Extend-path MLA over a capacity-padded latent cache.
+
+    h (B, nb, d) is the chunk's normed hidden state; cache_ckv (B, cap,
+    kv_lora) / cache_krope (B, cap, rope) hold the valid latent stream for
+    [0, start).  The chunk's latents are written at [start, start+nb), K/V
+    are expanded from the *whole padded* latent (bucketed waste, not
+    ragged shapes), and garbage beyond start+nb is causally masked.
+    ``start`` may be traced — one executable per cache bucket.
+
+    Returns (projected out, (cache_ckv, cache_krope)).
+    """
+    from repro.kernels.common import extend_kernel_mode
+
+    b, nb = h.shape[:2]
+    q_nope, q_rope = _queries(p, m, h, positions, theta)
+    c_new, kr_new = _latent(p, m, h, positions, theta)
+    cache_ckv = seq_update(cache_ckv, c_new, start)
+    cache_krope = seq_update(cache_krope, kr_new, start)
+    k_nope = proj_heads(cache_ckv, p.w_uk)                # (B, cap, H, nope)
+    v = proj_heads(cache_ckv, p.w_uv)                     # (B, cap, H, v)
+    if extend_kernel_mode() == "kernel":
+        from repro.kernels.extend_attention import ops as extend_ops
+
+        out = extend_ops.extend_attention_mla(
+            q_nope, q_rope, k_nope, cache_krope, v, t_real=start + nb)
+    else:
+        cap = cache_ckv.shape[1]
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope,
+             jnp.broadcast_to(cache_krope[:, :, None, :],
+                              (*k_nope.shape[:3], m.qk_rope_head_dim))],
+            axis=-1)
+        k_pos = jnp.broadcast_to(jnp.arange(cap)[None], (b, cap))
+        out = blocked_attention(q, k, v, positions, k_pos, causal=True,
+                                block=block)
+    return proj_out(out, p.w_o), (cache_ckv, cache_krope)
 
 
 def mla_decode(p: MLAParams, m: MLAConfig, x, cache_ckv, cache_krope, pos, *,

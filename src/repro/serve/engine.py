@@ -20,6 +20,7 @@ points so compiled executables are shared across every session.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
@@ -31,9 +32,10 @@ import numpy as np
 from repro.core.cost import CostModel
 from repro.core.descriptors import Range
 from repro.core.optimizer import Plan, baseline_plan, shortest_plan
+from repro.kernels.common import bucket_len
 
-from .kv_cache import (DEFAULT_DOC, SegmentStore, cache_len, concat_caches,
-                       pad_cache, slice_cache)
+from .kv_cache import (DEFAULT_DOC, SegmentStore, cache_len, chunk_segment,
+                       concat_caches, insert_cache, pad_cache_to, slice_cache)
 
 
 @dataclass
@@ -78,14 +80,42 @@ class PrefixCacheBuilder:
 
     def __init__(self, model, params, store: SegmentStore, *,
                  chunk_tokens: int = 64,
+                 seq_bucket: int = 64,
                  cost_model: Optional[CostModel] = None) -> None:
         self.model = model
         self.params = params
         self.store = store
         self.chunk = chunk_tokens
+        self.seq_bucket = seq_bucket
         self.cost = cost_model if cost_model is not None else serve_cost_model()
-        self._jit_prefill = jax.jit(model.prefill)
-        self._jit_extend = jax.jit(model.prefill_extend, static_argnames=("start",))
+        # every entry point is shape-stable: caches ride at a bucketed
+        # capacity and `start` is a traced operand, so the executables
+        # below are compiled O(#buckets) times, not O(#chunks)
+        self.lowerings = {"prefill": 0, "extend": 0, "extend_many": 0,
+                          "insert": 0}
+        self._jit_prefill = jax.jit(self._counted(model.prefill, "prefill"))
+        self._jit_extend = jax.jit(self._counted(model.prefill_extend, "extend"))
+        self._jit_extend_many = jax.jit(
+            self._counted(model.prefill_extend_many, "extend_many"))
+        self._jit_insert = jax.jit(self._counted(insert_cache, "insert"))
+
+    def _counted(self, fn, key: str):
+        """Wrap ``fn`` so each jit trace (= one XLA lowering) is counted.
+
+        The wrapper body only runs while jax traces a new input signature,
+        so the counter is exactly the number of distinct executables —
+        what the recompile-count regression test pins down.
+        """
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            self.lowerings[key] += 1
+            return fn(*args, **kwargs)
+        return wrapper
+
+    @property
+    def extend_lowerings(self) -> int:
+        """Total prefill/extend executables compiled so far."""
+        return sum(self.lowerings.values())
 
     # ------------------------------------------------------------------
     def plan_prefix(self, length: int, *, doc_id: str = DEFAULT_DOC,
@@ -104,11 +134,18 @@ class PrefixCacheBuilder:
                      extras: Optional[dict] = None,
                      stats: Optional[ServeStats] = None,
                      materialize: bool = True,
-                     requester: Optional[int] = None):
+                     requester: Optional[int] = None,
+                     capacity: Optional[int] = None):
         """Assemble the KV cache for document[:length] via the cheapest plan.
 
-        Returns (caches, plan).  Base-scan steps run ``prefill_extend`` in
-        ``chunk_tokens`` chunks, each materialized (paper Alg 2 behaviour).
+        Returns (caches, plan) with the caches' sequence axis padded to
+        ``bucket_len(max(length, capacity), seq_bucket)`` — the shape
+        discipline that bounds compilation: every gap is filled through
+        the shape-stable ``prefill_extend`` entry points at this bucketed
+        capacity, and a whole gap's worth of full chunks goes through one
+        ``prefill_extend_many`` dispatch (a jitted fori_loop over chunk
+        slots) instead of one host round-trip per chunk.  Each chunk is
+        still materialized for future requests (paper Alg 2 behaviour).
         Segments the plan references are pinned for the duration so chunk
         puts can never evict them mid-execution.
         """
@@ -116,41 +153,102 @@ class PrefixCacheBuilder:
         extras = extras or {}
         plan = self.plan_prefix(length, doc_id=doc_id, stats=stats)
         steps = sorted(plan.steps, key=lambda s: s.rng.lo)  # DAG path is ordered
+        cap = bucket_len(max(length, capacity or 0), self.seq_bucket)
         caches = None
         t0 = time.perf_counter()
         with self.store.pinned(plan.models_used):
             for st in steps:
                 if st.model_id is not None:
                     seg = self.store.get(st.model_id, requester=requester)
-                    seg_caches = seg.caches
-                    caches = seg_caches if caches is None else concat_caches(caches, seg_caches)
+                    if caches is None:
+                        caches = seg.caches
+                    elif cache_len(caches) == st.rng.lo:
+                        # still exact-length (segments only so far): concat
+                        caches = concat_caches(caches, seg.caches)
+                    else:
+                        # already padded to cap: write the segment in place
+                        caches = self._jit_insert(
+                            caches, seg.caches, jnp.asarray(st.rng.lo, jnp.int32))
                     stats.tokens_reused += st.rng.size
                 else:
-                    for lo in range(st.rng.lo, st.rng.hi, self.chunk):
-                        hi = min(lo + self.chunk, st.rng.hi)
-                        toks = jnp.asarray(doc[None, lo:hi])
-                        if caches is None and lo == 0:
-                            batch = {"tokens": toks, **extras}
-                            _, caches = self._jit_prefill(self.params, batch)
-                        else:
-                            _, caches = self._jit_extend(self.params, caches, toks, start=lo)
-                        if materialize:
-                            self.store.put(Range(lo, hi), slice_cache(caches, lo, hi),
-                                           doc_id=doc_id, created_by=requester)
-                        stats.tokens_computed += hi - lo
+                    caches = self._fill_gap(
+                        doc, st.rng, caches, cap, extras, doc_id=doc_id,
+                        stats=stats, materialize=materialize,
+                        requester=requester)
+        if caches is not None:
+            caches = pad_cache_to(caches, cap)
         stats.prefill_s += time.perf_counter() - t0
         return caches, plan
+
+    def _fill_gap(self, doc, rng: Range, caches, cap: int, extras, *,
+                  doc_id, stats, materialize, requester):
+        """Prefill one uncovered plan step [rng.lo, rng.hi) into ``caches``.
+
+        Full chunks run as a single fused ``prefill_extend_many`` dispatch;
+        at most one ragged remainder runs as a single ``prefill_extend``.
+        Only a cold start at position 0 uses the exact-shape ``prefill``
+        (one compile per distinct first-chunk length).
+        """
+        lo, hi = rng.lo, rng.hi
+        if caches is None and lo == 0:
+            first = min(self.chunk, hi)
+            batch = {"tokens": jnp.asarray(doc[None, :first]), **extras}
+            _, caches = self._jit_prefill(self.params, batch)
+            if materialize:
+                self.store.put(Range(0, first), slice_cache(caches, 0, first),
+                               doc_id=doc_id, created_by=requester)
+            stats.tokens_computed += first
+            lo = first
+            if lo >= hi:
+                return caches
+        caches = pad_cache_to(caches, cap)
+        # dynamic_update_slice *clamps* an out-of-range start instead of
+        # raising, which would silently overwrite prefix rows — check the
+        # capacity contract eagerly (host ints, no jit impact).  cache_len
+        # is 0 for pure-SSM caches (no sequence leaves): nothing to clamp.
+        cur = cache_len(caches)
+        assert cur == 0 or cur >= hi, f"cache capacity {cur} < gap end {hi}"
+        n_full = (hi - lo) // self.chunk
+        if n_full:
+            n_slots = cap // self.chunk          # static per (cap, chunk)
+            toks = np.zeros((1, n_slots, self.chunk), np.int32)
+            toks[0, :n_full] = np.asarray(
+                doc[lo:lo + n_full * self.chunk]).reshape(n_full, self.chunk)
+            _, caches, states = self._jit_extend_many(
+                self.params, caches, jnp.asarray(toks),
+                jnp.asarray(lo, jnp.int32), jnp.asarray(n_full, jnp.int32))
+            if materialize:
+                for i in range(n_full):
+                    a = lo + i * self.chunk
+                    self.store.put(
+                        Range(a, a + self.chunk),
+                        chunk_segment(caches, states, i, a, a + self.chunk),
+                        doc_id=doc_id, created_by=requester)
+            stats.tokens_computed += n_full * self.chunk
+            lo += n_full * self.chunk
+        if lo < hi:                              # ragged remainder chunk
+            toks = jnp.asarray(doc[None, lo:hi])
+            _, caches = self._jit_extend(self.params, caches, toks,
+                                         jnp.asarray(lo, jnp.int32))
+            if materialize:
+                self.store.put(Range(lo, hi), slice_cache(caches, lo, hi),
+                               doc_id=doc_id, created_by=requester)
+            stats.tokens_computed += hi - lo
+        return caches
 
     def prefix_with_logits(self, doc: np.ndarray, prefix_len: int, *,
                            doc_id: str = DEFAULT_DOC,
                            extras: Optional[dict] = None,
                            stats: Optional[ServeStats] = None,
-                           requester: Optional[int] = None):
+                           requester: Optional[int] = None,
+                           capacity: Optional[int] = None):
         """Cache for [0, prefix_len) plus the logits of its last position.
 
         The last prefix token runs through a 1-token extend so its logits
         (= the first sampling distribution) come out of the same pass that
         completes the cache — correct for running-state (SSD) layers too.
+        Pass ``capacity`` (e.g. prefix_len + n_new) so the returned caches
+        are already padded to the decode bucket the request will need.
         """
         stats = stats if stats is not None else ServeStats()
         extras = extras or {}
@@ -163,11 +261,15 @@ class PrefixCacheBuilder:
             return logits, caches, baseline_plan(Range(0, prefix_len), self.cost)
         caches, plan = self.build_prefix(
             doc, prefix_len - 1, doc_id=doc_id, extras=extras, stats=stats,
-            materialize=True, requester=requester)
+            materialize=True, requester=requester,
+            capacity=max(prefix_len, capacity or 0))
         toks = jnp.asarray(doc[None, prefix_len - 1: prefix_len])
+        cur = cache_len(caches)
+        assert cur == 0 or cur >= prefix_len, (
+            f"cache capacity {cur} < prefix {prefix_len}")
         t0 = time.perf_counter()
         logits, caches = self._jit_extend(self.params, caches, toks,
-                                          start=prefix_len - 1)
+                                          jnp.asarray(prefix_len - 1, jnp.int32))
         stats.prefill_s += time.perf_counter() - t0
         stats.tokens_computed += 1
         return logits, caches, plan
@@ -193,6 +295,7 @@ class ServeEngine:
         *,
         extras: Optional[dict] = None,
         chunk_tokens: int = 64,
+        seq_bucket: int = 64,
         cost_model: Optional[CostModel] = None,
         byte_budget: Optional[int] = None,
         store: Optional[SegmentStore] = None,
@@ -210,6 +313,7 @@ class ServeEngine:
         self.store = store if store is not None else SegmentStore(byte_budget=byte_budget)
         self.builder = PrefixCacheBuilder(model, params, self.store,
                                           chunk_tokens=chunk_tokens,
+                                          seq_bucket=seq_bucket,
                                           cost_model=cost_model)
         self.cost = self.builder.cost
         self.stats = ServeStats()
@@ -236,8 +340,11 @@ class ServeEngine:
         self.stats.requests += 1
         logits, caches, plan = self.builder.prefix_with_logits(
             self.doc, prefix_len, doc_id=self.doc_id, extras=self.extras,
-            stats=self.stats)
-        caches = pad_cache(caches, n_new)
+            stats=self.stats, capacity=prefix_len + n_new)
+        # prefix construction already padded to a bucket covering the decode
+        # window; this is a no-op except on the short-prefix prefill path
+        caches = pad_cache_to(
+            caches, bucket_len(prefix_len + n_new, self.builder.seq_bucket))
         t0 = time.perf_counter()
         out_tokens = []
         key = jax.random.PRNGKey(seed)

@@ -26,13 +26,14 @@ import numpy as np
 
 from repro.core.descriptors import DescriptorIndex, Range
 from repro.core.store import PinnedLRU
-
-#: cache keys whose axis 2 is the document/sequence axis
-SEQ_KEYS = ("k", "v", "c_kv", "k_rope")
-#: cache keys holding running state (kept only at segment end)
-STATE_KEYS = ("conv", "ssm")
-#: cache keys constant across the document (context K/V)
-CONST_KEYS = ("ck", "cv")
+# the model layer owns the cache-leaf taxonomy (it creates the entries);
+# re-exported here under the serve layer's historical names.  In *stored*
+# segment trees layers are scan-stacked, so SEQ leaves carry the document
+# axis at axis 2 (layer, batch, seq, ...).
+from repro.models.common import CACHE_CONST_KEYS as CONST_KEYS
+from repro.models.common import CACHE_SEQ_KEYS as SEQ_KEYS
+from repro.models.common import CACHE_STATE_KEYS as STATE_KEYS
+from repro.models.common import cache_leaf_key as _leaf_key
 
 
 def slice_cache(caches, lo: int, hi: int, *, base: int = 0):
@@ -83,15 +84,55 @@ def pad_cache(caches, extra: int):
     return jax.tree_util.tree_map_with_path(f, caches)
 
 
+def pad_cache_to(caches, target: int):
+    """Grow the sequence axis of SEQ leaves up to ``target`` capacity."""
+    cur = cache_len(caches)
+    if cur >= target:
+        return caches
+    return pad_cache(caches, target - cur)
+
+
+def insert_cache(caches, seg, start):
+    """Write an exact-length segment into a capacity-padded cache at ``start``.
+
+    The padded-cache counterpart of :func:`concat_caches` — used when a
+    reuse step lands after a gap has already forced padding to the bucket
+    capacity, so concatenation would mis-size the sequence axis.  ``start``
+    may be a traced scalar (the caller jits this per segment-length).
+    State and constant leaves are taken from the (later) segment, matching
+    concat semantics: a segment's stored SSD state is the running state at
+    its own end, valid because plan steps apply in document order.
+    """
+
+    def f(path, big, small):
+        if _leaf_key(path) in SEQ_KEYS:
+            idx = (0, 0, start) + (0,) * (big.ndim - 3)
+            return jax.lax.dynamic_update_slice(
+                big, small.astype(big.dtype), idx)
+        return small
+    return jax.tree_util.tree_map_with_path(f, caches, seg)
+
+
+def chunk_segment(caches, chunk_states, i: int, lo: int, hi: int):
+    """Materialized segment for fused-loop chunk ``i`` covering [lo, hi).
+
+    Sequence leaves are sliced out of the (padded) post-loop caches;
+    running-state leaves come from the per-chunk snapshot the fused loop
+    recorded (``prefill_extend_many``'s third output) — the final cache
+    only holds the state at *gap* end, which would be wrong for every
+    chunk but the last.
+    """
+    seg = slice_cache(caches, lo, hi)
+
+    def f(path, s, snap):
+        if _leaf_key(path) in STATE_KEYS:
+            return snap[i]
+        return s
+    return jax.tree_util.tree_map_with_path(f, seg, chunk_states)
+
+
 def cache_nbytes(caches) -> int:
     return sum(np.asarray(x).nbytes for x in jax.tree.leaves(caches))
-
-
-def _leaf_key(path) -> Optional[str]:
-    for p in reversed(path):
-        if hasattr(p, "key"):
-            return p.key
-    return None
 
 
 DEFAULT_DOC = "doc"

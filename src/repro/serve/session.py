@@ -32,7 +32,8 @@ from repro.core.optimizer import Plan
 from repro.kernels.common import bucket_len
 
 from .engine import PrefixCacheBuilder, ServeStats
-from .kv_cache import SEQ_KEYS, SegmentStore, _leaf_key, cache_len, pad_cache
+from .kv_cache import (SEQ_KEYS, SegmentStore, _leaf_key, cache_len,
+                       pad_cache_to)
 
 
 def doc_key(doc_tokens: np.ndarray, extras: Optional[dict] = None) -> str:
@@ -58,14 +59,6 @@ def batch_caches(caches_list: list) -> Any:
 def split_caches(caches, n: int) -> list:
     """Inverse of :func:`batch_caches`: per-row views of a batched cache."""
     return [jax.tree.map(lambda x: x[:, i:i + 1], caches) for i in range(n)]
-
-
-def pad_cache_to(caches, target: int):
-    """Grow the sequence axis of SEQ leaves up to ``target`` capacity."""
-    cur = cache_len(caches)
-    if cur >= target:
-        return caches
-    return pad_cache(caches, target - cur)
 
 
 def batch_signature(caches) -> tuple:
@@ -137,8 +130,12 @@ class SessionManager:
         self.model = model
         self.params = params
         self.store = SegmentStore(byte_budget=byte_budget)
+        # prefill pads caches to the same token buckets batched decode uses,
+        # so a freshly built prefix drops into a decode pack without a
+        # reshape and prefill executables are shared across requests
         self.builder = PrefixCacheBuilder(model, params, self.store,
                                           chunk_tokens=chunk_tokens,
+                                          seq_bucket=decode_bucket,
                                           cost_model=cost_model)
         self.decode_bucket = decode_bucket
         self.max_batch = max_batch
@@ -189,7 +186,7 @@ class SessionManager:
         self._flush_packs([g for g in self._packs if sid in g])
         logits, caches, plan = self.builder.prefix_with_logits(
             s.doc, prefix_len, doc_id=s.doc_id, extras=s.extras,
-            stats=s.stats, requester=sid)
+            stats=s.stats, requester=sid, capacity=prefix_len + n_new)
         s.caches = caches
         s.logits = logits
         s.greedy_next = None

@@ -1,0 +1,102 @@
+"""Recompile-count regression: incremental prefill compiles O(#buckets)
+executables, not O(#chunks).
+
+Before the bucketed extend path, ``prefill_extend`` was jitted with a
+static ``start`` over a cache that grew every chunk, so a cold N-chunk
+prefill paid N distinct XLA lowerings — the incremental step cost more in
+compiles than recomputation cost in FLOPs (the exact inversion of the
+paper's Alg 2 economics).  These tests pin the fix: one shape-stable
+executable per (cache bucket, chunk shape), counted via the builder's
+trace-counting wrappers.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core.descriptors import Range
+from repro.models.lm import LM
+from repro.serve.engine import ServeEngine
+from repro.serve.kv_cache import SegmentStore, cache_len, slice_cache
+from repro.serve.session import SessionManager
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(ARCHS["deepseek-67b"])
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(0, cfg.vocab_size, 320).astype(np.int32)
+            for _ in range(4)]
+    return cfg, model, params, docs
+
+
+def test_cold_multidoc_serve_lowerings_bounded_by_buckets(setup):
+    """Cold-serving several documents shares one executable set: the
+    lowering count stays flat while the chunk count grows per document."""
+    cfg, model, params, docs = setup
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=64)
+    sids = [mgr.add_session(d) for d in docs[:3]]
+    for sid in sids:                     # identical request shape, cold docs
+        mgr.submit(sid, 256, 2)
+        mgr.run()
+    agg = mgr.aggregate_stats()
+    chunks = agg.tokens_computed // 32
+    low = mgr.builder.lowerings
+    # per cold doc: prefill [0,32), one fused extend_many for [32,224),
+    # one ragged remainder [224,255), one 1-token boundary extend — all
+    # four executables are shared across the three documents
+    assert chunks >= 3 * 8, f"expected ≥24 chunks of work, got {chunks}"
+    assert low["extend_many"] == 1, low
+    assert mgr.builder.extend_lowerings <= 5, (
+        f"cold prefill must compile O(#buckets) executables, "
+        f"got {low} for {chunks} chunks")
+
+
+def test_new_length_same_bucket_adds_no_gap_loop_compile(setup):
+    """A different document served at a different chunk-aligned length in
+    the same capacity bucket reuses the fused gap-loop executable."""
+    cfg, model, params, docs = setup
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=64)
+    s1 = mgr.add_session(docs[0])
+    mgr.submit(s1, 256, 2)
+    mgr.run()
+    before = dict(mgr.builder.lowerings)
+    s2 = mgr.add_session(docs[1])
+    mgr.submit(s2, 224, 34)              # same 320-bucket: 224+34 and 256+2
+    mgr.run()
+    after = mgr.builder.lowerings
+    assert after["extend_many"] == before["extend_many"], (before, after)
+    assert after["prefill"] == before["prefill"], (before, after)
+
+
+def test_multi_gap_plan_single_dispatch_per_gap(setup):
+    """A plan with interleaved reuse/gap steps fills every gap through the
+    same fused executable and inserts segments without recompiling per
+    position; the result matches a cold build exactly."""
+    cfg, model, params, docs = setup
+    doc = docs[0]
+    # reference build to carve mid-document segments from
+    ref = ServeEngine(model, params, doc, chunk_tokens=32)
+    ref_caches, _ = ref.build_prefix(256)
+
+    store = SegmentStore()
+    store.put(Range(64, 96), slice_cache(ref_caches, 64, 96), doc_id="d")
+    store.put(Range(160, 192), slice_cache(ref_caches, 160, 192), doc_id="d")
+    eng = ServeEngine(model, params, doc, chunk_tokens=32, store=store,
+                      doc_id="d")
+    caches, plan = eng.build_prefix(256)
+    gaps = [s for s in plan.steps if s.model_id is None]
+    assert len(gaps) >= 2, "plan should interleave reuse and gaps"
+    low = eng.builder.lowerings
+    # gaps [0,64), [96,160), [192,256): one prefill + one shared fused
+    # loop; the two 32-token segment inserts share one executable
+    assert low["extend_many"] == 1, low
+    assert low["insert"] <= 1, low
+    assert eng.builder.extend_lowerings <= 4, low
+    assert cache_len(caches) == cache_len(ref_caches)
+    np.testing.assert_allclose(
+        np.asarray(caches[0]["p0"]["k"][:, :, :256]),
+        np.asarray(ref_caches[0]["p0"]["k"][:, :, :256]),
+        rtol=1e-5, atol=1e-5)

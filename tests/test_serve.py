@@ -43,6 +43,33 @@ def test_reuse_matches_scratch(name):
     assert len(plan.models_used) > 0
 
 
+@pytest.mark.parametrize("name", [
+    "deepseek-67b",                                     # GQA extend branch
+    pytest.param("deepseek-v2-236b", marks=pytest.mark.slow),  # MLA branch
+])
+def test_kernel_extend_path_matches_blocked(name, monkeypatch):
+    """The serve flow with REPRO_EXTEND_KERNEL=1 (Pallas extend kernel,
+    interpret mode on CPU) generates the same tokens as the blocked path.
+
+    This drives the model-level kernel routing (`extend_attention_cached`
+    / `mla_extend` → kernels.extend_attention.ops) end-to-end — the branch
+    TPU serving takes — not just the ops layer.  The mode is read at jit
+    *trace* time, so it must be set before the engine's first build.
+    """
+    cfg, model, params, doc = _setup(name)
+    monkeypatch.setenv("REPRO_EXTEND_KERNEL", "0")
+    blocked = ServeEngine(model, params, doc, chunk_tokens=32)
+    toks_blocked, _ = blocked.generate(96, 3)
+    monkeypatch.setenv("REPRO_EXTEND_KERNEL", "1")
+    kernel = ServeEngine(model, params, doc, chunk_tokens=32)
+    toks_kernel, plan = kernel.generate(96, 3)
+    assert toks_kernel == toks_blocked
+    # warm reuse request stays on the kernel path too
+    toks2, plan2 = kernel.generate(96, 2)
+    assert toks2 == toks_blocked[:2]
+    assert len(plan2.models_used) > 0
+
+
 def test_second_identical_request_is_all_reuse():
     cfg, model, params, doc = _setup("deepseek-67b")
     eng = ServeEngine(model, params, doc, chunk_tokens=32)
