@@ -1,6 +1,6 @@
 """Beyond-paper: the paper's reuse machinery applied to LM serving.
 
-Two scenarios:
+Four scenarios:
 
   * ``serve_prefix_reuse`` — prefix-cache construction time with
     descriptor-planned segment reuse vs from-scratch prefill, on a reduced
@@ -11,6 +11,17 @@ Two scenarios:
     tokens/s, reuse fraction, cross-session segment hits, and eviction
     counts — the "many queries over shared views" compounding that F-IVM /
     LINVIEW observe, mapped onto KV-prefix reuse.
+  * ``serve_eviction_pressure`` — one hot document repeatedly served
+    while a stream of one-off documents floods a tight shared byte
+    budget; the same traffic runs under global LRU and under the cost
+    model's benefit-per-byte victim selection, reporting the hot
+    requests' store hit rate and rebuild cost per policy.  This is the
+    paper's F(n)-vs-C(M) trade-off applied to the *eviction* decision.
+  * ``serve_decode_reuse`` — a session generates past the end of its
+    document, the decoded tokens' KV is written back into the store, and
+    a follow-up request over the generated context is served from the
+    store — parity-checked (bit-identical tokens) against re-prefilling
+    the generated text.
 """
 from __future__ import annotations
 
@@ -137,9 +148,141 @@ def multi_session(n_sessions: int = 6, n_shared: int = 3, doc_len: int = 768,
          f"lowerings={mgr.builder.extend_lowerings}")
 
 
+def _eviction_traffic(policy: str, model, params, docs, budget, *,
+                      rounds: int, n_new: int = 2):
+    """Hot-doc + one-off-doc traffic under one byte budget and policy.
+
+    Returns (hot hit rate, hot rebuilt tokens, hot rebuild seconds,
+    evictions) over the timed rounds (warm round excluded).
+    """
+    from repro.serve.session import SessionManager
+
+    hot_doc, cold_docs = docs
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
+                         byte_budget=budget, eviction_policy=policy,
+                         decode_materialize=False)
+    hot = mgr.add_session(hot_doc)
+    # warm rounds (compiles): the first builds the hot segments, the second
+    # hits them — the frequency signal the cost policy ranks by, which any
+    # actually-hot tenant has and a one-off tenant does not
+    for _ in range(2):
+        mgr.submit(hot, len(hot_doc), n_new)
+        mgr.run()
+    hs = mgr.sessions[hot].stats
+    reused0, computed0, prefill0 = hs.tokens_reused, hs.tokens_computed, hs.prefill_s
+    for r in range(rounds):
+        # a one-off tenant floods the store, then never returns …
+        cold = mgr.add_session(cold_docs[r])
+        mgr.submit(cold, len(cold_docs[r]), n_new)
+        mgr.run()
+        mgr.close_session(cold)
+        # … and the hot tenant pays for whatever eviction it caused
+        mgr.submit(hot, len(hot_doc), n_new)
+        mgr.run()
+    reused = hs.tokens_reused - reused0
+    computed = hs.tokens_computed - computed0
+    rebuild_s = hs.prefill_s - prefill0
+    hit_rate = reused / max(reused + computed, 1)
+    return hit_rate, computed, rebuild_s, mgr.store.evictions
+
+
+def eviction_pressure(rounds: int = 4, doc_len: int = 192) -> None:
+    """Same byte budget, same traffic, LRU vs cost-weighted eviction."""
+    from repro.configs import ARCHS, reduced
+    from repro.models.lm import LM
+    from repro.serve.session import SessionManager
+
+    cfg = reduced(ARCHS["deepseek-67b"])
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    hot_doc = rng.integers(0, cfg.vocab_size, doc_len).astype(np.int32)
+    cold_docs = [rng.integers(0, cfg.vocab_size, doc_len).astype(np.int32)
+                 for _ in range(rounds)]
+
+    # size the budget off one resident document: room for the hot doc plus
+    # slack, but not for a one-off tenant's segments alongside it
+    probe = SessionManager(model, params, chunk_tokens=32, decode_bucket=32)
+    p = probe.add_session(hot_doc)
+    probe.submit(p, doc_len, 2)
+    probe.run()
+    budget = int(probe.store.nbytes() * 1.5)
+
+    t0 = time.perf_counter()
+    hit_lru, rebuilt_lru, s_lru, ev_lru = _eviction_traffic(
+        "lru", model, params, (hot_doc, cold_docs), budget, rounds=rounds)
+    hit_cost, rebuilt_cost, s_cost, ev_cost = _eviction_traffic(
+        "cost", model, params, (hot_doc, cold_docs), budget, rounds=rounds)
+    wall = time.perf_counter() - t0
+
+    # recorded (not asserted) so a policy regression still leaves a full,
+    # gateable BENCH_serve.json behind instead of aborting the module
+    if hit_cost < hit_lru:
+        print(f"# WARNING cost-weighted eviction lost to LRU: "
+              f"{hit_cost:.2f} < {hit_lru:.2f}")
+    emit("serve_eviction_pressure", wall * 1e6 / (2 * rounds),
+         f"cost_policy_wins={int(hit_cost >= hit_lru)};"
+         f"hit_rate_lru={hit_lru:.2f};"
+         f"hit_rate_cost={hit_cost:.2f};"
+         f"rebuilt_tokens_lru={rebuilt_lru};"
+         f"rebuilt_tokens_cost={rebuilt_cost};"
+         f"rebuild_s_lru={s_lru:.3f};"
+         f"rebuild_s_cost={s_cost:.3f};"
+         f"evictions_lru={ev_lru};"
+         f"evictions_cost={ev_cost};"
+         f"byte_budget={budget}")
+
+
+def decode_reuse(doc_len: int = 192, n_new: int = 16, n_follow: int = 8) -> None:
+    """Generate past the document end, then serve a follow-up request over
+    the generated context from the store (vs re-prefilling it)."""
+    from repro.configs import ARCHS, reduced
+    from repro.models.lm import LM
+    from repro.serve.session import SessionManager
+
+    cfg = reduced(ARCHS["deepseek-67b"])
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    doc = np.random.default_rng(4).integers(0, cfg.vocab_size, doc_len).astype(np.int32)
+
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32)
+    sid = mgr.add_session(doc)
+    mgr.submit(sid, doc_len, n_new, seed=0)
+    first = mgr.run()[sid]
+    s = mgr.sessions[sid]
+    reused0, computed0 = s.stats.tokens_reused, s.stats.tokens_computed
+
+    t0 = time.perf_counter()
+    plan = mgr.submit(sid, len(s.doc), n_follow, seed=1)
+    follow = mgr.run()[sid]
+    wall = time.perf_counter() - t0
+    reused = s.stats.tokens_reused - reused0
+    computed = s.stats.tokens_computed - computed0
+    decode_hit = any(st.model_id is not None and st.rng.lo >= doc_len
+                     for st in plan.steps)
+    if not decode_hit:
+        print("# WARNING follow-up did not reuse the decode-materialized KV")
+
+    # parity reference: no materialization -> re-prefill the generated text
+    ref = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
+                         decode_materialize=False)
+    rid = ref.add_session(np.concatenate([doc, np.asarray(first, np.int32)]))
+    ref.submit(rid, doc_len + n_new, n_follow, seed=1)
+    identical = ref.run()[rid] == follow
+
+    emit("serve_decode_reuse", wall * 1e6,
+         f"store_hit={int(decode_hit)};"
+         f"reused_tokens={reused};"
+         f"computed_tokens={computed};"
+         f"decode_segments={mgr.sched.decode_segments};"
+         f"identical_vs_reprefill={int(identical)}")
+
+
 def main() -> None:
     single_session()
     multi_session()
+    eviction_pressure()
+    decode_reuse()
 
 
 if __name__ == "__main__":

@@ -5,6 +5,30 @@ to ``BENCH_serve.json`` at the repo root (machine-readable perf
 trajectory; regenerated on each run, keyed by benchmark name).  Modules
 scale the paper's 5M-row setting to CPU-minutes while preserving every
 size ratio (see common.py).
+
+``BENCH_serve.json`` schema (version 1)::
+
+    {
+      "schema": 1,
+      "records": [
+        {
+          "name": "<benchmark name>",       # unique key; newer runs replace
+          "us_per_call": <float>,           # headline latency, microseconds
+          "derived": {"<metric>": "<str>"}, # benchmark-specific key/values
+                                            # (emit()'s ';'-separated pairs)
+          "backend": "cpu" | "tpu" | ...,   # provenance, stamped per record
+          "python": "<version>",
+          "unix_s": <int>                   # when this record was measured
+        }, ...
+      ]
+    }
+
+Records merge by ``name``: a filtered run (e.g. ``benchmarks.run
+serve_reuse``) refreshes only its own records and the rest of the
+trajectory survives, so provenance is stamped per record — retained
+entries may come from a different host or backend.  All ``derived``
+values are strings (as printed in the CSV); consumers parse numbers as
+needed.
 """
 from __future__ import annotations
 

@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""Docs freshness gate: link check + doctest over the architecture doc.
+
+Two passes, both cheap enough for every push:
+
+  * **references** — every markdown link target and every backtick-quoted
+    repo path (``src/...``, ``tests/...``, …) in ``docs/ARCHITECTURE.md``
+    and ``README.md`` must exist on disk, so module renames can't silently
+    orphan the documentation;
+  * **doctests** — fenced ``python`` blocks containing ``>>>`` in
+    ``docs/ARCHITECTURE.md`` run under ``doctest`` with ``src`` on the
+    path, so documented API behaviour (cost-model admission etc.) is
+    executed, not just asserted in prose.
+
+Exit status is non-zero on any failure; run directly or via
+``tests/test_docs.py`` (tier-1) and the CI ``docs`` job.
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = [ROOT / "docs" / "ARCHITECTURE.md", ROOT / "README.md"]
+
+#: top-level directories whose backtick-quoted paths are checked
+_CHECKED_PREFIXES = ("src/", "tests/", "benchmarks/", "scripts/", "docs/",
+                     "examples/", ".github/")
+
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#][^)]*)\)")
+_BACKTICK = re.compile(r"`([^`\s]+)`")
+_PY_BLOCK = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def check_references(doc: Path) -> list[str]:
+    """Missing link targets / quoted repo paths in ``doc``."""
+    text = doc.read_text()
+    missing: list[str] = []
+    candidates = set()
+    for target in _MD_LINK.findall(text):
+        target = target.split("#")[0].strip()
+        if target and "://" not in target:
+            candidates.add((target, doc.parent))
+    for token in _BACKTICK.findall(text):
+        if token.startswith(_CHECKED_PREFIXES) and "/" in token:
+            candidates.add((token, ROOT))
+    for target, base in sorted(candidates):
+        if not (base / target).exists() and not (ROOT / target).exists():
+            missing.append(f"{doc.name}: missing {target!r}")
+    return missing
+
+
+def run_doctests(doc: Path) -> int:
+    """Run ``>>>`` examples in the doc's ```python blocks; returns #failures."""
+    sys.path.insert(0, str(ROOT / "src"))
+    parser = doctest.DocTestParser()
+    runner = doctest.DocTestRunner(verbose=False)
+    for i, block in enumerate(_PY_BLOCK.findall(doc.read_text())):
+        if ">>>" not in block:
+            continue
+        test = parser.get_doctest(block, {}, f"{doc.name}[block {i}]",
+                                  str(doc), 0)
+        runner.run(test)
+    return runner.failures
+
+
+def main() -> int:
+    problems: list[str] = []
+    for doc in DOCS:
+        if not doc.exists():
+            problems.append(f"missing doc: {doc.relative_to(ROOT)}")
+            continue
+        problems.extend(check_references(doc))
+    n_doctest_failures = run_doctests(ROOT / "docs" / "ARCHITECTURE.md")
+    if n_doctest_failures:
+        problems.append(f"ARCHITECTURE.md: {n_doctest_failures} doctest "
+                        f"failure(s)")
+    for p in problems:
+        print(f"check_docs: {p}", file=sys.stderr)
+    if not problems:
+        print("check_docs: all references resolve, doctests pass")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,7 +10,7 @@ Public API:
   IncrementalAnalyticsEngine        — the middle layer tying it together
 """
 from . import linreg, logreg, naive_bayes
-from .cost import CostModel, calibrate
+from .cost import CostModel, calibrate, serve_cost_model
 from .descriptors import DescriptorIndex, Range, coalesce, covered_size, subtract_cover
 from .engine import IncrementalAnalyticsEngine, QueryResult
 from .families import FAMILIES, ModelFamily, get_family
@@ -49,6 +49,7 @@ __all__ = [
     "baseline_plan",
     "calibrate",
     "coalesce",
+    "serve_cost_model",
     "covered_size",
     "execute",
     "get_family",

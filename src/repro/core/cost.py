@@ -1,4 +1,4 @@
-"""Cost model for plan optimization (§5).
+"""Cost model for plan optimization (§5) and store lifecycle decisions.
 
 The paper requires only *monotonicity*: fetching more points never costs
 less.  We use a calibrated affine model:
@@ -10,6 +10,19 @@ less.  We use a calibrated affine model:
 On the 2015 prototype these were disk-seek dominated; on the TPU target the
 same structure holds with HBM/DMA rates.  ``calibrate()`` measures the
 constants on the running host so planner decisions track reality.
+
+One vocabulary for every consumer.  The analytical planner prices base
+scans with ``F(n)`` where n is a row count; the serving layer prices
+prefill with the *same* ``F(n)`` where n is a token count (see
+:func:`serve_cost_model`, which folds per-token prefill seconds into the
+F(n) slope).  Because both paths speak F/C, the same instance also drives
+the two store lifecycle decisions this module exposes:
+
+  * ``admit(n, nbytes)`` — is a freshly materialized entry worth its
+    bytes?  (decode-time segment admission)
+  * ``reuse_benefit_s(n, nbytes)`` — seconds a future request saves by
+    loading the entry instead of rebuilding it; per byte, this is the
+    eviction policy's retention score (see ``core.store``).
 """
 from __future__ import annotations
 
@@ -30,6 +43,9 @@ class CostModel:
     model_bytes_per_s: float = 4e9
     # merges
     merge_s: float = 1e-5
+    # lifecycle knobs (admission / eviction, not plan costing)
+    expected_reuses: float = 1.0      # prior on future hits of a new entry
+    admit_min_benefit_s: float = 0.0  # required net win before storing
 
     def fetch_points(self, n: int) -> float:
         if n <= 0:
@@ -60,6 +76,60 @@ class CostModel:
 
     def C(self, model_bytes: int) -> float:  # noqa: N802
         return self.use_model(model_bytes)
+
+    # -- store lifecycle ---------------------------------------------------
+    def recompute_s(self, n: int) -> float:
+        """Seconds to rebuild an entry covering ``n`` points from base data.
+
+        For the analytical store this is a base scan; for the serving
+        store it is a prefill over ``n`` tokens — both are F(n) under
+        their respective calibrations.
+        """
+        return self.fetch_points(n)
+
+    def reuse_benefit_s(self, n: int, nbytes: int) -> float:
+        """Seconds one future hit saves by loading the entry (C) instead
+        of rebuilding it (F).  Negative when the entry is cheaper to
+        recompute than to load — such entries should never be stored."""
+        return self.fetch_points(n) - self.use_model(nbytes)
+
+    def admit(self, n: int, nbytes: int) -> bool:
+        """Admission control for newly materialized entries.
+
+        Admit iff the *expected* benefit over the entry's lifetime —
+        ``expected_reuses`` future hits, each saving ``reuse_benefit_s``
+        — clears ``admit_min_benefit_s``.  With the defaults (one
+        expected reuse, zero margin) this rejects exactly the entries
+        whose load cost exceeds their rebuild cost, e.g. one-token
+        decode slivers whose fixed store-lookup cost dominates.
+        """
+        return (self.expected_reuses * self.reuse_benefit_s(n, nbytes)
+                > self.admit_min_benefit_s)
+
+
+def serve_cost_model(*, prefill_s_per_token: float = 1e-4,
+                     load_s_per_byte: float = 1e-9,
+                     fixed_s: float = 1e-4) -> CostModel:
+    """The serving calibration of :class:`CostModel` (one shared vocabulary).
+
+    Maps the paper's F/C onto LM serving: "points" are document tokens, so
+    ``F(n)`` prices prefilling n tokens (per-token seconds folded into the
+    two slope terms, split evenly) and ``C(M)`` prices fetching a stored KV
+    segment of M bytes.  The same instance then also drives segment
+    admission and cost-weighted eviction, so the planner, the admission
+    check, and the victim selector can never disagree about what a segment
+    is worth.
+    """
+    cm = CostModel()
+    cm.io_fixed_s = fixed_s
+    # fold per-token prefill cost into the F(n) slope
+    cm.bytes_per_row = 1.0
+    cm.io_bytes_per_s = 2.0 / prefill_s_per_token
+    cm.flops_per_row = 1.0
+    cm.flops_per_s = 2.0 / prefill_s_per_token
+    cm.model_fixed_s = fixed_s
+    cm.model_bytes_per_s = 1.0 / load_s_per_byte
+    return cm
 
 
 @dataclass

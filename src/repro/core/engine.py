@@ -46,13 +46,15 @@ class IncrementalAnalyticsEngine:
         materialize: MaterializePolicy = "always",
     ) -> None:
         self.backend = backend
-        self.store = store if store is not None else ModelStore()
         if cost_model is not None:
             self.cost = cost_model
         elif hasattr(backend, "cost_model"):
             self.cost = backend.cost_model()   # backend-calibrated F(n)/C(M)
         else:
             self.cost = CostModel()
+        # an engine-owned store evicts with the engine's cost model, so
+        # planning and victim selection price F(n)/C(M) identically
+        self.store = store if store is not None else ModelStore(cost_model=self.cost)
         self.materialize: MaterializePolicy = materialize
         self.stats = {"queries": 0, "reused": 0, "optimizer_s": 0.0}
 

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import os
 import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
@@ -18,8 +19,12 @@ from typing import Any, Iterable, Iterator, Optional
 
 import numpy as np
 
+from .cost import CostModel
 from .descriptors import DescriptorIndex, Range
 from .suffstats import STATS_FAMILIES, Combinable
+
+#: eviction policies understood by :class:`PinnedStore`
+EVICTION_POLICIES = ("cost", "lru")
 
 
 @dataclass
@@ -30,6 +35,7 @@ class StoredModel:
     stats: Combinable
     created_s: float = field(default_factory=time.time)
     last_used_s: float = field(default_factory=time.time)
+    hits: int = 0
     meta: dict = field(default_factory=dict)
 
     @property
@@ -37,8 +43,8 @@ class StoredModel:
         return self.stats.nbytes
 
 
-class PinnedLRU:
-    """Pin-aware LRU eviction shared by byte-budgeted stores.
+class PinnedStore:
+    """Pin-aware, cost-model-weighted eviction shared by byte-budgeted stores.
 
     Used by :class:`ModelStore` (materialized statistics) and the serving
     ``SegmentStore`` (KV segments): both materialize new entries *during*
@@ -47,10 +53,39 @@ class PinnedLRU:
     reentrant counts; the eviction loop lives here so policy changes apply
     to every store.  Subclasses provide ``byte_budget``/``nbytes()``/
     ``evictions`` plus the ``_entries()`` / ``_evict(victim)`` hooks.
+
+    Victim selection (``policy="cost"``, the default) is *benefit per
+    byte*, not recency: each entry's retention score is
+
+        ``recompute_s(entry) · decayed_frequency(entry) / nbytes(entry)``
+
+    where ``recompute_s`` is the unified cost model's F(n) over the
+    entry's descriptor (what a future request pays to rebuild it from
+    base data / re-prefill it), ``decayed_frequency`` is ``1 + hits``
+    decayed exponentially by idle time (half-life
+    ``decay_half_life_s``), and ``nbytes`` is the budget the entry
+    occupies.  The cheapest-to-rebuild byte goes first; frequently hit
+    entries survive a flood of never-reused newcomers (scan resistance
+    global LRU lacks).  Exact score ties fall back to least recently
+    used, so homogeneous workloads behave exactly as before.
+
+    ``policy="lru"`` restores the pre-cost behaviour — kept so benchmarks
+    can hold the byte budget fixed and compare policies.  The default may
+    also be overridden process-wide with ``REPRO_EVICTION_POLICY``.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, *, cost_model: Optional[CostModel] = None,
+                 policy: Optional[str] = None,
+                 decay_half_life_s: float = 300.0) -> None:
         self._pins: dict[str, int] = {}
+        self.cost = cost_model if cost_model is not None else CostModel()
+        if policy is None:
+            policy = os.environ.get("REPRO_EVICTION_POLICY", "cost")
+        if policy not in EVICTION_POLICIES:
+            raise ValueError(f"unknown eviction policy {policy!r}; "
+                             f"expected one of {EVICTION_POLICIES}")
+        self.policy = policy
+        self.decay_half_life_s = decay_half_life_s
 
     @contextmanager
     def pinned(self, ids: Iterable[str]):
@@ -77,6 +112,34 @@ class PinnedLRU:
     def _evict(self, victim) -> None:
         raise NotImplementedError
 
+    def _recompute_s(self, entry) -> float:
+        """Estimated seconds to rebuild ``entry`` from base data if it is
+        evicted and later needed — the unified cost model's F over the
+        entry's descriptor.  Subclasses may refine (e.g. price a KV
+        segment's prefill differently from a statistics scan)."""
+        return self.cost.recompute_s(entry.rng.size)
+
+    def retention_score(self, entry, now: Optional[float] = None) -> float:
+        """Benefit-per-byte of keeping ``entry`` resident (higher = keep).
+
+        ``recompute_s · (1 + hits) · 2^(−idle/half_life) / nbytes``: the
+        expected seconds of rebuild work one stored byte saves, with the
+        hit count standing in for reuse probability and decayed by idle
+        time so dead entries eventually lose to fresh ones.
+        """
+        now = time.time() if now is None else now
+        idle = max(now - entry.last_used_s, 0.0)
+        freq = (1.0 + entry.hits) * 2.0 ** (-idle / self.decay_half_life_s)
+        return self._recompute_s(entry) * freq / max(entry.nbytes, 1)
+
+    def _pick_victim(self, candidates: list):
+        if self.policy == "lru":
+            return min(candidates, key=lambda e: e.last_used_s)
+        now = time.time()
+        # score ties (identical entries, quantized clocks) degrade to LRU
+        return min(candidates,
+                   key=lambda e: (self.retention_score(e, now), e.last_used_s))
+
     def _maybe_evict(self) -> None:
         if self.byte_budget is None:
             return
@@ -85,15 +148,21 @@ class PinnedLRU:
                           if k not in self._pins]
             if not candidates:
                 return  # everything resident is pinned by in-flight plans
-            self._evict(min(candidates, key=lambda e: e.last_used_s))
+            self._evict(self._pick_victim(candidates))
             self.evictions += 1
 
 
-class ModelStore(PinnedLRU):
+#: historical name (the policy was global LRU through PR 2)
+PinnedLRU = PinnedStore
+
+
+class ModelStore(PinnedStore):
     """Per-family materialized models, indexed for Alg 3/4."""
 
-    def __init__(self, byte_budget: Optional[int] = None) -> None:
-        super().__init__()
+    def __init__(self, byte_budget: Optional[int] = None, *,
+                 cost_model: Optional[CostModel] = None,
+                 policy: Optional[str] = None) -> None:
+        super().__init__(cost_model=cost_model, policy=policy)
         self._models: dict[str, StoredModel] = {}
         self._indexes: dict[str, DescriptorIndex] = {}
         self._seq = 0
@@ -118,6 +187,7 @@ class ModelStore(PinnedLRU):
     def get(self, model_id: str) -> StoredModel:
         sm = self._models[model_id]
         sm.last_used_s = time.time()
+        sm.hits += 1
         return sm
 
     def drop(self, model_id: str) -> None:

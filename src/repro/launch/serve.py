@@ -36,7 +36,9 @@ def run_single(args, cfg, model, params, rng) -> None:
 
     doc = rng.integers(0, cfg.vocab_size, args.doc_len).astype(np.int32)
     eng = ServeEngine(model, params, doc, extras=_extras(cfg),
-                      chunk_tokens=args.chunk_tokens)
+                      chunk_tokens=args.chunk_tokens,
+                      byte_budget=args.byte_budget if args.byte_budget > 0 else None,
+                      eviction_policy=args.eviction_policy)
     for i in range(args.requests):
         L = int(rng.integers(args.doc_len // 4, args.doc_len))
         toks, plan = eng.generate(L, args.new_tokens, greedy=False, seed=i)
@@ -60,7 +62,9 @@ def run_multi(args, cfg, model, params, rng) -> None:
     budget = args.byte_budget if args.byte_budget > 0 else None
     mgr = SessionManager(model, params, chunk_tokens=args.chunk_tokens,
                          byte_budget=budget, decode_bucket=args.chunk_tokens,
-                         max_batch=args.max_batch)
+                         max_batch=args.max_batch,
+                         eviction_policy=args.eviction_policy,
+                         decode_materialize=not args.no_decode_materialize)
     extras = _extras(cfg)
     # the first `n_shared` sessions all serve one document; the rest get unique docs
     sids = []
@@ -88,10 +92,13 @@ def run_multi(args, cfg, model, params, rng) -> None:
           f"{agg.tokens_decoded / wall:.1f} tok/s wall, reuse {agg.reuse_frac:.1%} "
           f"({agg.tokens_reused} reused / {agg.tokens_computed} computed)")
     print(f"  store: {len(st)} segments, {st.nbytes()/1e6:.1f} MB, "
-          f"{st.evictions} evictions, {st.cross_session_hits} cross-session hits")
+          f"{st.evictions} evictions ({st.policy} policy), "
+          f"{st.cross_session_hits} cross-session hits")
     print(f"  scheduler: {mgr.sched.decode_calls} batched decode calls, "
           f"mean batch {mgr.sched.mean_batch:.2f}, "
           f"{mgr.sched.pack_rebuilds} pack rebuilds")
+    print(f"  decode materialization: {mgr.sched.decode_segments} segments "
+          f"admitted, {mgr.sched.decode_rejects} rejected")
 
 
 def main() -> None:
@@ -110,6 +117,12 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--byte-budget", type=int, default=0,
                     help="global segment-store budget in bytes (0 = unbounded)")
+    ap.add_argument("--eviction-policy", choices=["cost", "lru"], default=None,
+                    help="victim selection under --byte-budget: cost-model "
+                         "benefit-per-byte (default) or legacy global LRU")
+    ap.add_argument("--no-decode-materialize", action="store_true",
+                    help="disable writing decode-generated KV back into the "
+                         "segment store")
     args = ap.parse_args()
 
     from repro.configs import get_config, reduced

@@ -29,7 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost import CostModel
+from repro.core.cost import CostModel, serve_cost_model  # noqa: F401  (re-export:
+# serve_cost_model moved to core.cost so the analytical planner and the
+# serving layer share one F/C vocabulary; importing it from here keeps
+# existing callers working)
 from repro.core.descriptors import Range
 from repro.core.optimizer import Plan, baseline_plan, shortest_plan
 from repro.kernels.common import bucket_len
@@ -54,21 +57,6 @@ class ServeStats:
         return self.tokens_reused / tot if tot else 0.0
 
 
-def serve_cost_model(*, prefill_s_per_token: float = 1e-4,
-                     load_s_per_byte: float = 1e-9,
-                     fixed_s: float = 1e-4) -> CostModel:
-    cm = CostModel()
-    cm.io_fixed_s = fixed_s
-    # fold per-token prefill cost into the F(n) slope
-    cm.bytes_per_row = 1.0
-    cm.io_bytes_per_s = 2.0 / prefill_s_per_token
-    cm.flops_per_row = 1.0
-    cm.flops_per_s = 2.0 / prefill_s_per_token
-    cm.model_fixed_s = fixed_s
-    cm.model_bytes_per_s = 1.0 / load_s_per_byte
-    return cm
-
-
 class PrefixCacheBuilder:
     """Plans and assembles KV prefix caches against a (shared) SegmentStore.
 
@@ -76,6 +64,29 @@ class PrefixCacheBuilder:
     (``doc_id`` keys the store's descriptor index) and the stats object to
     charge, so one builder serves any number of tenants with one set of
     compiled executables.
+
+    Bucketed-cache invariants (PR 2) every entry point preserves:
+
+      * caches returned by :meth:`build_prefix` / :meth:`prefix_with_logits`
+        ride at capacity ``bucket_len(max(length, capacity), seq_bucket)``
+        along the sequence axis — the same token buckets batched decode
+        packs to, so a fresh prefix drops into a decode pack without a
+        reshape;
+      * ``start`` / valid length is a **traced** int32 operand of the
+        extend paths, so one XLA executable per (cache bucket, chunk
+        shape) serves every chunk of every request; positions beyond the
+        valid length hold garbage that causal masking excludes;
+      * ``lowerings`` counts actual jit traces per entry point (the
+        wrapper body only runs while tracing), which is what
+        ``tests/test_prefill_recompile.py`` pins down: cold prefill cost
+        is O(#buckets) executables, not O(#chunks).
+
+    Cost-model hooks (PR 3): ``self.cost`` is the *unified*
+    :class:`~repro.core.cost.CostModel` (serving calibration via
+    :func:`~repro.core.cost.serve_cost_model`) and should be the same
+    instance the SegmentStore evicts with — planner edge weights,
+    decode-segment admission (``cost.admit``), and eviction victim
+    scores then price fetch/rebuild/load identically.
     """
 
     def __init__(self, model, params, store: SegmentStore, *,
@@ -300,6 +311,7 @@ class ServeEngine:
         byte_budget: Optional[int] = None,
         store: Optional[SegmentStore] = None,
         doc_id: str = DEFAULT_DOC,
+        eviction_policy: Optional[str] = None,
     ) -> None:
         self.model = model
         self.params = params
@@ -310,7 +322,18 @@ class ServeEngine:
             raise ValueError(
                 "pass byte_budget only when the engine owns its store; a "
                 "shared store's budget is set where the store is created")
-        self.store = store if store is not None else SegmentStore(byte_budget=byte_budget)
+        if store is not None and eviction_policy is not None:
+            raise ValueError(
+                "pass eviction_policy only when the engine owns its store; "
+                "a shared store's policy is set where the store is created")
+        cost_model = cost_model if cost_model is not None else serve_cost_model()
+        if store is None:
+            # the engine-owned store evicts with the same cost model the
+            # planner prices plans with (one F/C vocabulary end to end)
+            store = SegmentStore(byte_budget=byte_budget,
+                                 cost_model=cost_model,
+                                 policy=eviction_policy)
+        self.store = store
         self.builder = PrefixCacheBuilder(model, params, self.store,
                                           chunk_tokens=chunk_tokens,
                                           seq_bucket=seq_bucket,

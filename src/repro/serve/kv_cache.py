@@ -13,19 +13,41 @@ running recurrence, so only *prefix-aligned* boundaries are cacheable — a
 segment's SSD entry stores the state *at the segment end*, valid only when
 every earlier position is covered by the plan (always true for DAG plans
 anchored at 0).
+
+Stored-segment shape invariants (established in PR 2, relied on by every
+consumer here):
+
+  * stored segment trees are **layer scan-stacked**, so SEQ leaves carry
+    the document axis at axis 2 — ``(layers, batch, seq, ...)`` — and
+    batch is always 1 for store-resident segments;
+  * segments are stored at **exact length** (``rng.size`` along axis 2);
+    padding to a bucketed capacity happens only in live request caches
+    (``pad_cache_to``), never in the store;
+  * running-state leaves (``conv``/``ssm``) hold the state at the
+    segment's *end*; constant leaves (``ck``/``cv``) are prefix-invariant.
+
+Lifecycle hooks (PR 3): the store inherits :class:`repro.core.store.
+PinnedStore`'s cost-model-weighted eviction — the victim is the segment
+with the cheapest recompute-benefit per byte (see ``retention_score``),
+with ``policy="lru"`` available for comparison — and gains :meth:`alias`
+so decode-time materialization can publish a generated continuation as a
+new content-keyed document whose prefix segments are shared with the base
+document rather than recomputed or copied.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from functools import cached_property
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost import CostModel
 from repro.core.descriptors import DescriptorIndex, Range
-from repro.core.store import PinnedLRU
+from repro.core.store import PinnedStore
 # the model layer owns the cache-leaf taxonomy (it creates the entries);
 # re-exported here under the serve layer's historical names.  In *stored*
 # segment trees layers are scan-stacked, so SEQ leaves carry the document
@@ -149,25 +171,37 @@ class StoredSegment:
     cross_session_hits: int = 0
     created_s: float = field(default_factory=time.time)
     last_used_s: float = field(default_factory=time.time)
+    #: extra document ids whose descriptor indexes also reference this
+    #: segment (decode-time forks share their base document's prefix)
+    aliases: set = field(default_factory=set)
 
-    @property
+    @cached_property
     def nbytes(self) -> int:
+        # caches are immutable once stored; computed once so eviction scans
+        # (which score every candidate) never re-walk the leaf tree
         return cache_nbytes(self.caches)
 
+    def doc_ids(self) -> set:
+        return {self.doc_id} | self.aliases
 
-class SegmentStore(PinnedLRU):
-    """Document-keyed, descriptor-indexed KV segments under one LRU budget.
+
+class SegmentStore(PinnedStore):
+    """Document-keyed, descriptor-indexed KV segments under one byte budget.
 
     Segments from *all* documents (tenants) share a single byte budget —
     the serving analogue of the paper's storage/recomputation trade-off at
     multi-query scale.  Each document gets its own :class:`DescriptorIndex`
-    so plans never cross documents, while eviction is global LRU (a cold
-    tenant's segments are reclaimed for a hot one).  Segments referenced by
-    an in-flight plan are protected via the inherited ``pinned`` context.
+    so plans never cross documents, while eviction is global and
+    cost-model-weighted (a cold tenant's cheap-to-rebuild segments are
+    reclaimed for a hot one; see ``PinnedStore.retention_score``).
+    Segments referenced by an in-flight plan are protected via the
+    inherited ``pinned`` context.
     """
 
-    def __init__(self, byte_budget: Optional[int] = None) -> None:
-        super().__init__()
+    def __init__(self, byte_budget: Optional[int] = None, *,
+                 cost_model: Optional[CostModel] = None,
+                 policy: Optional[str] = None) -> None:
+        super().__init__(cost_model=cost_model, policy=policy)
         self._indexes: dict[str, DescriptorIndex] = {}
         self._segs: dict[str, StoredSegment] = {}
         self._seq = 0
@@ -175,6 +209,11 @@ class SegmentStore(PinnedLRU):
         self.evictions = 0
         self.evicted_bytes = 0
         self.cross_session_hits = 0
+        #: per-segment bound on fork references: beyond this, alias() skips
+        #: the segment (the fork re-prefills it instead) so long fork
+        #: lineages cannot grow a segment's metadata without bound
+        self.max_aliases = 64
+        self.alias_skips = 0
 
     def index(self, doc_id: str = DEFAULT_DOC) -> DescriptorIndex:
         if doc_id not in self._indexes:
@@ -204,9 +243,70 @@ class SegmentStore(PinnedLRU):
             self.cross_session_hits += 1
         return seg
 
+    def alias(self, src_doc: str, dst_doc: str, *,
+              upto: Optional[int] = None) -> int:
+        """Publish ``src_doc``'s segments under ``dst_doc``'s index too.
+
+        Decode-time materialization forks a document: the generated
+        continuation ``doc[:L] + generated`` is new content (new
+        content-keyed id), but its first L tokens are *identical* to the
+        base document, so every base segment within ``[0, upto)`` is valid
+        for the fork as-is — KV depends only on the token prefix.  Aliasing
+        registers those segments in the fork's descriptor index (no copy;
+        one resident tensor, N plannable documents).  Segments reaching
+        past ``upto`` are skipped: beyond L the fork's content diverges
+        from the base document.  Returns the number of segments aliased.
+        Eviction removes a segment from every index that references it.
+        """
+        if src_doc == dst_doc or src_doc not in self._indexes:
+            return 0
+        dst = self.index(dst_doc)
+        n = 0
+        for sid, rng in list(self.index(src_doc).items()):
+            if upto is not None and rng.hi > upto:
+                continue
+            seg = self._segs[sid]
+            if dst_doc in seg.doc_ids() or sid in dst:
+                continue
+            if len(seg.aliases) >= self.max_aliases:
+                self.alias_skips += 1
+                continue
+            seg.aliases.add(dst_doc)
+            dst.add(sid, rng)
+            n += 1
+        return n
+
+    def release_doc(self, doc_id: str) -> int:
+        """Forget a document id: drop its index and unreference its segments.
+
+        The metadata counterpart of eviction, used when a document is known
+        to be dead — e.g. a session that advanced off its own previous
+        generated fork.  Segments still reachable under another document
+        (fork lineages share prefixes) merely lose this reference; segments
+        *only* this document referenced can never be planned again and are
+        dropped outright, freeing their bytes.  Returns the number of
+        segments dropped.  Safe to call for unknown ids (no-op).
+        """
+        idx = self._indexes.pop(doc_id, None)
+        if idx is None:
+            return 0
+        dropped = 0
+        for sid, _ in list(idx.items()):
+            seg = self._segs.get(sid)
+            if seg is None:
+                continue
+            seg.aliases.discard(doc_id)
+            if seg.doc_id == doc_id:
+                if seg.aliases:
+                    seg.doc_id = seg.aliases.pop()  # promote a live reference
+                elif sid not in self._pins:  # never drop under an in-flight plan
+                    del self._segs[sid]
+                    dropped += 1
+        return dropped
+
     def nbytes(self, doc_id: Optional[str] = None) -> int:
         return sum(s.nbytes for s in self._segs.values()
-                   if doc_id is None or s.doc_id == doc_id)
+                   if doc_id is None or doc_id in s.doc_ids())
 
     def __len__(self) -> int:
         return len(self._segs)
@@ -216,17 +316,20 @@ class SegmentStore(PinnedLRU):
 
     def segment_bytes(self, doc_id: str = DEFAULT_DOC) -> dict[str, int]:
         return {sid: s.nbytes for sid, s in self._segs.items()
-                if s.doc_id == doc_id}
+                if doc_id in s.doc_ids()}
 
     def _entries(self) -> dict:
         return self._segs
 
     def _evict(self, victim: StoredSegment) -> None:
         del self._segs[victim.seg_id]
-        idx = self._indexes[victim.doc_id]
-        idx.remove(victim.seg_id)
-        if len(idx) == 0:
-            # content-hashed doc_ids churn forever in a long-running server;
-            # drop emptied indexes so _indexes doesn't grow without bound
-            del self._indexes[victim.doc_id]
+        for doc_id in victim.doc_ids():
+            idx = self._indexes.get(doc_id)
+            if idx is None or victim.seg_id not in idx:
+                continue
+            idx.remove(victim.seg_id)
+            if len(idx) == 0:
+                # content-hashed doc_ids churn forever in a long-running
+                # server; drop emptied indexes so _indexes stays bounded
+                del self._indexes[doc_id]
         self.evicted_bytes += victim.nbytes

@@ -15,10 +15,22 @@ bucketed capacity (``kernels.common.bucket_len``) and concatenating along
 the batch axis.  Per-row positions + the decode paths' position masks make
 ragged progress exact — a padded row attends only to its own ``pos``
 prefix, so batched outputs are bit-identical to single-session decode.
+
+Decode-time segment materialization (PR 3): the tokens a request emits
+*extend the document* — decode already wrote their KV into the session's
+cache, so when the request drains, that slice is written back into the
+shared store under the content key of the generated continuation
+(``doc[:prefix] + generated``), gated by the unified cost model's
+admission check (``CostModel.admit``: expected reuse benefit must exceed
+the segment's byte cost).  The base document's prefix segments are
+*aliased* into the continuation's descriptor index rather than copied, so
+a follow-up request over generated context plans entirely from the store
+— no re-prefill of text the server itself produced.
 """
 from __future__ import annotations
 
 import hashlib
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
@@ -27,13 +39,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost import CostModel
+from repro.core.cost import CostModel, serve_cost_model
+from repro.core.descriptors import Range
 from repro.core.optimizer import Plan
 from repro.kernels.common import bucket_len
 
 from .engine import PrefixCacheBuilder, ServeStats
 from .kv_cache import (SEQ_KEYS, SegmentStore, _leaf_key, cache_len,
-                       pad_cache_to)
+                       cache_nbytes, pad_cache_to, slice_cache)
 
 
 def doc_key(doc_tokens: np.ndarray, extras: Optional[dict] = None) -> str:
@@ -94,6 +107,9 @@ class Session:
     logits: Any = None          # (1, V) distribution for the next token
     pos: int = 0                # next decode position
     capacity: int = 0           # required KV capacity (prefix + n_new)
+    req_prefix: int = 0         # prefix length of the in-flight request
+    mat_pending: bool = False   # drained request's KV awaits write-back
+    fork_owned: bool = False    # doc_id is a generated fork this session made
     remaining: int = 0
     greedy: bool = True
     key: Any = None
@@ -112,6 +128,8 @@ class SchedulerStats:
     decode_calls: int = 0
     decode_rows: int = 0
     pack_rebuilds: int = 0
+    decode_segments: int = 0    # decode-KV segments admitted to the store
+    decode_rejects: int = 0     # ... rejected by the cost-model admission
 
     @property
     def mean_batch(self) -> float:
@@ -126,17 +144,28 @@ class SessionManager:
                  cost_model: Optional[CostModel] = None,
                  byte_budget: Optional[int] = None,
                  decode_bucket: int = 64,
-                 max_batch: int = 8) -> None:
+                 max_batch: int = 8,
+                 eviction_policy: Optional[str] = None,
+                 decode_materialize: Optional[bool] = None) -> None:
         self.model = model
         self.params = params
-        self.store = SegmentStore(byte_budget=byte_budget)
+        # one cost model prices everything: planner edges, decode-segment
+        # admission, and the store's eviction victim scores
+        self.cost = cost_model if cost_model is not None else serve_cost_model()
+        self.store = SegmentStore(byte_budget=byte_budget,
+                                  cost_model=self.cost,
+                                  policy=eviction_policy)
         # prefill pads caches to the same token buckets batched decode uses,
         # so a freshly built prefix drops into a decode pack without a
         # reshape and prefill executables are shared across requests
         self.builder = PrefixCacheBuilder(model, params, self.store,
                                           chunk_tokens=chunk_tokens,
                                           seq_bucket=decode_bucket,
-                                          cost_model=cost_model)
+                                          cost_model=self.cost)
+        if decode_materialize is None:
+            decode_materialize = os.environ.get(
+                "REPRO_DECODE_MATERIALIZE", "1") != "0"
+        self.decode_materialize = decode_materialize
         self.decode_bucket = decode_bucket
         self.max_batch = max_batch
         # per-request counters live on each Session (folded into
@@ -168,6 +197,10 @@ class SessionManager:
         self._flush_packs([g for g in self._packs if sid in g])
         s = self.sessions.pop(sid, None)
         if s is not None:
+            if s.mat_pending:
+                # the last request's generated KV outlives the session —
+                # another tenant may continue the same generated document
+                self._materialize_decode(s)
             # fold the session's counters into the closed-session totals so
             # aggregate_stats stays consistent after churn
             _accumulate(self._closed_stats, s.stats)
@@ -184,6 +217,10 @@ class SessionManager:
         # this session so stale batched caches are never reused, while
         # unrelated in-flight packs stay intact
         self._flush_packs([g for g in self._packs if sid in g])
+        if s.mat_pending:
+            # last chance to write the previous request's generated KV back
+            # before prefix_with_logits replaces the session caches
+            self._materialize_decode(s)
         logits, caches, plan = self.builder.prefix_with_logits(
             s.doc, prefix_len, doc_id=s.doc_id, extras=s.extras,
             stats=s.stats, requester=sid, capacity=prefix_len + n_new)
@@ -192,6 +229,7 @@ class SessionManager:
         s.greedy_next = None
         s.pos = prefix_len
         s.capacity = prefix_len + n_new
+        s.req_prefix = prefix_len
         s.remaining = n_new
         s.greedy = greedy
         s.key = jax.random.PRNGKey(seed)
@@ -233,17 +271,83 @@ class SessionManager:
         A finished request's per-session caches and its final pack rows are
         never read again — the next submit replans the prefix from the
         (store-resident) segments — so holding them would pin KV for idle
-        tenants indefinitely in a long-running server.
+        tenants indefinitely in a long-running server.  Before release,
+        each drained request's generated KV is sliced back into the store
+        (:meth:`_materialize_decode`), so dropping the live cache loses
+        nothing a follow-up request could have reused.
         """
-        for g in [g for g in self._packs
-                  if all(sid not in self.sessions or not self.sessions[sid].busy
-                         for sid in g)]:
-            del self._packs[g]
+        idle_groups = [g for g in self._packs
+                       if all(sid not in self.sessions
+                              or not self.sessions[sid].busy for sid in g)]
+        if self.decode_materialize:
+            # flush (not just drop) the packs: the rows hold the
+            # decode-written KV that materialization slices from
+            self._flush_packs(idle_groups)
+        else:
+            for g in idle_groups:       # rows are never read again: drop
+                del self._packs[g]
         for s in self.sessions.values():
             if not s.busy:
+                if s.mat_pending:
+                    self._materialize_decode(s)
                 s.caches = None
                 s.logits = None
                 s.greedy_next = None
+
+    def _materialize_decode(self, s: Session) -> None:
+        """Write a drained request's decode-generated KV back into the store.
+
+        Decode wrote KV for positions ``[req_prefix, pos)`` — every emitted
+        token except the last, whose KV was never computed — into the
+        session cache.  That slice *is* a valid segment of the generated
+        continuation ``doc[:req_prefix] + out_tokens``, so it is stored
+        under that continuation's content key (a fork: the base document's
+        own positions ≥ req_prefix may hold different text).  Admission is
+        the unified cost model's call (paper §5 vocabulary: store only if
+        the expected reuse benefit F(n) − C(bytes) is worth it); the base
+        document's prefix segments are aliased into the fork's index so a
+        follow-up request over generated context plans fully from the
+        store.  When the request covered the whole document, the session
+        itself advances onto the continuation: its next request may address
+        the generated tokens directly.
+        """
+        s.mat_pending = False
+        if not self.decode_materialize or s.caches is None or not s.out_tokens:
+            return
+        start, end = s.req_prefix, s.pos
+        ext_doc = np.concatenate(
+            [s.doc[:start], np.asarray(s.out_tokens, np.int32)])
+        ext_id = doc_key(ext_doc, s.extras)
+        # the continuation is a real document either way: share the base
+        # prefix segments with it, and advance the session onto it when the
+        # request covered the whole document (follow-ups then address the
+        # generated tokens; if admission rejects below, they re-prefill
+        # them — the document extends, only its KV is deemed not worth
+        # storing)
+        self.store.alias(s.doc_id, ext_id, upto=start)
+        if start == len(s.doc):
+            old_id = s.doc_id
+            s.doc, s.doc_id = ext_doc, ext_id
+            if s.fork_owned and all(
+                    o.doc_id != old_id for o in self.sessions.values()
+                    if o.sid != s.sid):
+                # the fork this session advanced off is private generated
+                # content nobody else serves: retire its document id so a
+                # long generation chain doesn't grow per-segment alias sets
+                # and dead indexes without bound (the segments themselves
+                # survive under the new fork's references)
+                self.store.release_doc(old_id)
+            s.fork_owned = True
+        n_gen = end - start
+        if n_gen <= 0:
+            return  # 1-token request: nothing was ever decoded into the cache
+        seg = slice_cache(s.caches, start, end)
+        if not self.cost.admit(n_gen, cache_nbytes(seg)):
+            self.sched.decode_rejects += 1
+            return
+        self.store.put(Range(start, end), seg, doc_id=ext_id,
+                       created_by=s.sid)
+        self.sched.decode_segments += 1
 
     # -- internals ---------------------------------------------------------
     def _sample(self, s: Session) -> None:
@@ -259,6 +363,8 @@ class SessionManager:
         s.out_tokens.append(tok)
         s.remaining -= 1
         s.stats.tokens_decoded += 1
+        if s.remaining == 0:
+            s.mat_pending = True  # written back once the pack is flushed
 
     def _plan_groups(self, decode_set: list) -> list[tuple[int, ...]]:
         """Partition ready sessions into batchable groups of ≤ max_batch."""

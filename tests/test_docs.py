@@ -1,0 +1,31 @@
+"""Docs can't rot: run the link/doctest gate inside the test suite too.
+
+CI has a dedicated ``docs`` job running ``scripts/check_docs.py``; this
+wrapper makes the same gate part of the tier-1 suite so a local
+``pytest`` catches a stale module path or a drifted cost-model example
+before push.
+"""
+import importlib.util
+import pathlib
+
+
+def _load_check_docs():
+    path = pathlib.Path(__file__).resolve().parents[1] / "scripts" / "check_docs.py"
+    spec = importlib.util.spec_from_file_location("check_docs", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_doc_references_resolve():
+    cd = _load_check_docs()
+    problems = []
+    for doc in cd.DOCS:
+        assert doc.exists(), f"missing doc {doc}"
+        problems.extend(cd.check_references(doc))
+    assert problems == []
+
+
+def test_architecture_doctests_pass():
+    cd = _load_check_docs()
+    assert cd.run_doctests(cd.ROOT / "docs" / "ARCHITECTURE.md") == 0
