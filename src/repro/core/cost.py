@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from typing import Optional
 
 
 @dataclass
@@ -90,10 +91,20 @@ class CostModel:
     def reuse_benefit_s(self, n: int, nbytes: int) -> float:
         """Seconds one future hit saves by loading the entry (C) instead
         of rebuilding it (F).  Negative when the entry is cheaper to
-        recompute than to load — such entries should never be stored."""
+        recompute than to load — such entries should never be stored.
+
+        ``n`` is the entry's *valid* extent (tokens / rows a rebuild would
+        actually recompute); ``nbytes`` is what the entry *occupies* in
+        the store.  For bucket-padded KV segments the two deliberately
+        disagree — rebuild benefit scales with valid tokens while load
+        cost and byte-budget pressure scale with the padded capacity — so
+        callers must pass resident (padded) bytes here, which is exactly
+        what ``StoredSegment.nbytes`` reports.
+        """
         return self.fetch_points(n) - self.use_model(nbytes)
 
-    def admit(self, n: int, nbytes: int) -> bool:
+    def admit(self, n: int, nbytes: int, *,
+              expected_reuses: Optional[float] = None) -> bool:
         """Admission control for newly materialized entries.
 
         Admit iff the *expected* benefit over the entry's lifetime —
@@ -102,9 +113,17 @@ class CostModel:
         expected reuse, zero margin) this rejects exactly the entries
         whose load cost exceeds their rebuild cost, e.g. one-token
         decode slivers whose fixed store-lookup cost dominates.
+
+        ``expected_reuses`` overrides the static prior per call — the
+        serving ``SegmentStore`` passes the *observed* per-document reuse
+        rate so admission learns which tenants actually come back (see
+        ``SegmentStore.admission_prior``).  ``nbytes`` must be the bytes
+        the entry will actually occupy (padded-to-bucket capacity for KV
+        segments), so admission prices real residency, not the valid
+        slice.
         """
-        return (self.expected_reuses * self.reuse_benefit_s(n, nbytes)
-                > self.admit_min_benefit_s)
+        exp = self.expected_reuses if expected_reuses is None else expected_reuses
+        return exp * self.reuse_benefit_s(n, nbytes) > self.admit_min_benefit_s
 
 
 def serve_cost_model(*, prefill_s_per_token: float = 1e-4,

@@ -2,15 +2,22 @@
 
 Storage cost is the paper's explicit trade-off (Table 1) — the store tracks
 bytes per family and supports an LRU byte budget.  Persistence is a plain
-``npz`` per model plus a JSON manifest so a store survives process restarts
+``npz`` per entry plus a JSON manifest so a store survives process restarts
 (and, at cluster scale, host replacement: the manifest carries content
-hashes for integrity).
+hashes for integrity).  The npz-plus-manifest machinery lives on the shared
+:class:`PinnedStore` base — subclasses supply entry (de)serialization hooks
+— so the analytical ``ModelStore`` and the serving ``SegmentStore`` share
+one durable materialization layer: one manifest schema, one atomicity
+discipline (write to a temp directory, rename into place), and one
+retention-metadata round-trip (hits / last-touch, pins excluded) so the
+cost-model eviction policy resumes with honest scores after a restart.
 """
 from __future__ import annotations
 
 import hashlib
 import json
 import os
+import shutil
 import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
@@ -25,6 +32,56 @@ from .suffstats import STATS_FAMILIES, Combinable
 
 #: eviction policies understood by :class:`PinnedStore`
 EVICTION_POLICIES = ("cost", "lru")
+
+#: manifest filename shared by every persistent store
+MANIFEST_NAME = "MANIFEST.json"
+
+#: manifest schema version ("models" lists of version 1 became "entries")
+MANIFEST_VERSION = 2
+
+
+def flatten_tree(tree):
+    """Flatten a nested dict/list/tuple-of-arrays cache tree for npz storage.
+
+    Returns ``(spec, leaves)`` where ``spec`` is a JSON-serializable
+    description of the container structure (leaf slots reference positions
+    in ``leaves``).  Unlike ``jax.tree_util`` treedefs, the spec survives a
+    round-trip through a text manifest, which is what lets a KV segment's
+    arbitrary cache pytree reload in a fresh process.
+    """
+    leaves: list[np.ndarray] = []
+
+    def go(node):
+        if isinstance(node, dict):
+            return {"t": "dict", "items": [[k, go(v)] for k, v in node.items()]}
+        if isinstance(node, (list, tuple)):
+            kind = "tuple" if isinstance(node, tuple) else "list"
+            return {"t": kind, "items": [go(v) for v in node]}
+        if node is None:
+            return {"t": "none"}
+        leaves.append(np.asarray(node))
+        return {"t": "leaf", "i": len(leaves) - 1}
+
+    return go(tree), leaves
+
+
+def unflatten_tree(spec, leaves, *, leaf_fn=None):
+    """Inverse of :func:`flatten_tree`; ``leaf_fn`` maps each loaded array
+    (e.g. ``jnp.asarray`` to move segments onto the device at load time)."""
+
+    def go(node):
+        t = node["t"]
+        if t == "dict":
+            return {k: go(v) for k, v in node["items"]}
+        if t in ("list", "tuple"):
+            out = [go(v) for v in node["items"]]
+            return tuple(out) if t == "tuple" else out
+        if t == "none":
+            return None
+        leaf = leaves[node["i"]]
+        return leaf_fn(leaf) if leaf_fn is not None else leaf
+
+    return go(spec)
 
 
 @dataclass
@@ -119,17 +176,30 @@ class PinnedStore:
         segment's prefill differently from a statistics scan)."""
         return self.cost.recompute_s(entry.rng.size)
 
+    def _expected_reuses(self, entry) -> float:
+        """Prior on how often ``entry`` will be hit again — the cost model's
+        static ``expected_reuses`` (1.0 by default, reproducing the classic
+        ``1 + hits`` frequency term).  ``SegmentStore`` overrides this with
+        the *observed* per-document reuse rate so retention scores learn
+        which tenants actually come back."""
+        return self.cost.expected_reuses
+
     def retention_score(self, entry, now: Optional[float] = None) -> float:
         """Benefit-per-byte of keeping ``entry`` resident (higher = keep).
 
-        ``recompute_s · (1 + hits) · 2^(−idle/half_life) / nbytes``: the
-        expected seconds of rebuild work one stored byte saves, with the
-        hit count standing in for reuse probability and decayed by idle
-        time so dead entries eventually lose to fresh ones.
+        ``recompute_s · (prior + hits) · 2^(−idle/half_life) / nbytes``:
+        the expected seconds of rebuild work one stored byte saves, with
+        the hit count (plus the reuse prior, see ``_expected_reuses``)
+        standing in for reuse probability and decayed by idle time so dead
+        entries eventually lose to fresh ones.  ``nbytes`` is what the
+        entry actually occupies — for bucket-padded KV segments that is
+        the padded capacity, not the valid length, so victim ranking
+        prices real residency.
         """
         now = time.time() if now is None else now
         idle = max(now - entry.last_used_s, 0.0)
-        freq = (1.0 + entry.hits) * 2.0 ** (-idle / self.decay_half_life_s)
+        freq = (self._expected_reuses(entry) + entry.hits) \
+            * 2.0 ** (-idle / self.decay_half_life_s)
         return self._recompute_s(entry) * freq / max(entry.nbytes, 1)
 
     def _pick_victim(self, candidates: list):
@@ -150,6 +220,151 @@ class PinnedStore:
                 return  # everything resident is pinned by in-flight plans
             self._evict(self._pick_victim(candidates))
             self.evictions += 1
+
+    # -- persistence (shared npz + manifest machinery) ----------------------
+    # Subclasses implement the two entry hooks; the base owns the manifest
+    # schema, checksums, atomicity, and the retention-metadata round-trip.
+
+    def _serialize_entry(self, entry) -> tuple[dict, dict]:
+        """``entry -> (arrays, record)``: npz payload + JSON manifest record."""
+        raise NotImplementedError
+
+    def _deserialize_entry(self, record: dict, arrays) -> str:
+        """Re-insert one manifest record; returns the entry's store key."""
+        raise NotImplementedError
+
+    def _store_meta(self) -> dict:
+        """Store-level state carried in the manifest (e.g. bucket size)."""
+        return {}
+
+    def _apply_store_meta(self, meta: dict) -> None:
+        """Adopt store-level manifest state *before* entries deserialize."""
+
+    def _finish_load(self, meta: dict) -> None:
+        """Post-load fixups; the base re-enforces the byte budget (a store
+        snapshotted under a looser budget sheds down to the current one)."""
+        self._maybe_evict()
+
+    def save(self, path: str | Path) -> None:
+        """Snapshot the store to ``path`` atomically.
+
+        Everything — per-entry ``entry_*.npz`` files and ``MANIFEST.json``
+        — is written to a temporary sibling directory and renamed into
+        place, so a crash mid-snapshot can never leave a half-written
+        store behind: ``path`` either holds the previous complete snapshot
+        or the new one.  Retention metadata (hits, created/last-used
+        stamps) rides in the manifest; pins are runtime state and are
+        deliberately not persisted.
+        """
+        root = Path(path)
+        root.parent.mkdir(parents=True, exist_ok=True)
+        tmp = root.parent / f".{root.name}.tmp-{os.getpid()}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        try:
+            manifest: dict[str, Any] = {
+                "version": MANIFEST_VERSION,
+                "kind": type(self).__name__,
+                "store": self._store_meta(),
+                "entries": [],
+            }
+            for i, entry in enumerate(self._entries().values()):
+                arrays, record = self._serialize_entry(entry)
+                fname = f"entry_{i:06d}.npz"
+                fpath = tmp / fname
+                np.savez(fpath, **arrays)
+                record["file"] = fname
+                record["sha256"] = hashlib.sha256(
+                    fpath.read_bytes()).hexdigest()
+                record["retention"] = {
+                    "hits": entry.hits,
+                    "created_s": entry.created_s,
+                    "last_used_s": entry.last_used_s,
+                }
+                manifest["entries"].append(record)
+            (tmp / MANIFEST_NAME).write_text(json.dumps(manifest, indent=1))
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        if root.exists():
+            old = root.parent / f".{root.name}.old-{os.getpid()}"
+            if old.exists():
+                shutil.rmtree(old)
+            os.rename(root, old)
+            os.rename(tmp, root)
+        else:
+            os.rename(tmp, root)
+        # the snapshot at `root` is now complete: every `.old`/`.tmp`
+        # sibling — this save's and any stranded by earlier crashed saves
+        # (possibly other pids) — is stale; sweep them so crashes can't
+        # leak full-size snapshot copies indefinitely
+        for pattern in (f".{root.name}.old-*", f".{root.name}.tmp-*"):
+            for stale in root.parent.glob(pattern):
+                shutil.rmtree(stale, ignore_errors=True)
+
+    @staticmethod
+    def _recover_interrupted_swap(root: Path) -> None:
+        """Heal the save swap's one non-atomic window.
+
+        ``save`` renames the previous snapshot to ``.{name}.old-{pid}``
+        before renaming the new one into place; a crash exactly between
+        the two renames leaves ``root`` missing with the previous complete
+        snapshot stranded under the ``.old`` name.  Load restores it, so
+        the documented guarantee — ``path`` always yields a complete
+        snapshot — holds across that window too.
+        """
+        if (root / MANIFEST_NAME).exists() or root.exists() \
+                or not root.parent.exists():
+            return
+        for old in sorted(root.parent.glob(f".{root.name}.old-*")):
+            if (old / MANIFEST_NAME).exists():
+                os.rename(old, root)
+                return
+
+    @classmethod
+    def load(cls, path: str | Path, *, verify: bool = True, **ctor_kwargs):
+        """Rebuild a store from a :meth:`save` snapshot.
+
+        ``ctor_kwargs`` are forwarded to the subclass constructor (byte
+        budget, cost model, policy, …).  With ``verify`` (the default)
+        every entry file's sha256 is checked against the manifest, so a
+        corrupt or tampered snapshot raises instead of serving garbage.
+        Retention metadata is restored per entry after insertion, so
+        eviction resumes from honest hit counts and idle times.
+        """
+        root = Path(path)
+        cls._recover_interrupted_swap(root)
+        manifest = json.loads((root / MANIFEST_NAME).read_text())
+        version = manifest.get("version")
+        if version != MANIFEST_VERSION:
+            raise IOError(
+                f"unsupported store manifest version {version!r} at {root} "
+                f"(expected {MANIFEST_VERSION}); re-save the store with the "
+                f"current code")
+        store = cls(**ctor_kwargs)
+        meta = manifest.get("store", {})
+        store._apply_store_meta(meta)
+        for rec in manifest["entries"]:
+            fpath = root / rec["file"]
+            if verify:
+                digest = hashlib.sha256(fpath.read_bytes()).hexdigest()
+                if digest != rec["sha256"]:
+                    raise IOError(f"checksum mismatch for {rec['file']}")
+            arrays = np.load(fpath)
+            key = store._deserialize_entry(rec, arrays)
+            # a tighter budget than the snapshot's may evict entries while
+            # they load; restore retention only for what stayed resident
+            entry = store._entries().get(key)
+            if entry is None:
+                continue
+            ret = rec.get("retention", {})
+            entry.hits = int(ret.get("hits", entry.hits))
+            entry.created_s = float(ret.get("created_s", entry.created_s))
+            entry.last_used_s = float(ret.get("last_used_s",
+                                              entry.last_used_s))
+        store._finish_load(meta)
+        return store
 
 
 #: historical name (the policy was global LRU through PR 2)
@@ -223,56 +438,34 @@ class ModelStore(PinnedStore):
     def _evict(self, victim: StoredModel) -> None:
         self.drop(victim.model_id)
 
-    # -- persistence -----------------------------------------------------------
-    def save(self, path: str | Path) -> None:
-        root = Path(path)
-        root.mkdir(parents=True, exist_ok=True)
-        manifest: dict[str, Any] = {"version": 1, "models": []}
-        for i, sm in enumerate(self._models.values()):
-            import jax
+    # -- persistence (PinnedStore hooks) ---------------------------------------
+    def _serialize_entry(self, sm: StoredModel) -> tuple[dict, dict]:
+        import jax
 
-            leaves, treedef = jax.tree_util.tree_flatten(sm.stats)
-            fname = f"model_{i:06d}.npz"
-            arrays = {f"leaf_{j}": np.asarray(x) for j, x in enumerate(leaves)}
-            fpath = root / fname
-            np.savez(fpath, **arrays)
-            digest = hashlib.sha256(fpath.read_bytes()).hexdigest()
-            manifest["models"].append(
-                {
-                    "model_id": sm.model_id,
-                    "family": sm.family,
-                    "lo": sm.rng.lo,
-                    "hi": sm.rng.hi,
-                    "file": fname,
-                    "sha256": digest,
-                    "n_leaves": len(leaves),
-                    "meta": sm.meta,
-                }
-            )
-        (root / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
+        leaves, _ = jax.tree_util.tree_flatten(sm.stats)
+        arrays = {f"leaf_{j}": np.asarray(x) for j, x in enumerate(leaves)}
+        record = {
+            "model_id": sm.model_id,
+            "family": sm.family,
+            "lo": sm.rng.lo,
+            "hi": sm.rng.hi,
+            "n_leaves": len(leaves),
+            "meta": sm.meta,
+        }
+        return arrays, record
+
+    def _deserialize_entry(self, rec: dict, arrays) -> str:
+        import dataclasses as dc
+
+        leaves = [arrays[f"leaf_{j}"] for j in range(rec["n_leaves"])]
+        proto = STATS_FAMILIES[rec["family"]]
+        # rebuild via the dataclass fields of the family's stats type
+        fields = [f.name for f in dc.fields(proto)]
+        stats = proto(**dict(zip(fields, leaves)))
+        return self.put(rec["family"], Range(rec["lo"], rec["hi"]), stats,
+                        meta=rec.get("meta", {}), model_id=rec["model_id"])
 
     @classmethod
     def load(cls, path: str | Path, byte_budget: Optional[int] = None,
              verify: bool = True) -> "ModelStore":
-        import jax
-
-        root = Path(path)
-        manifest = json.loads((root / "MANIFEST.json").read_text())
-        store = cls(byte_budget=byte_budget)
-        for ent in manifest["models"]:
-            fpath = root / ent["file"]
-            if verify:
-                digest = hashlib.sha256(fpath.read_bytes()).hexdigest()
-                if digest != ent["sha256"]:
-                    raise IOError(f"checksum mismatch for {ent['file']}")
-            data = np.load(fpath)
-            leaves = [data[f"leaf_{j}"] for j in range(ent["n_leaves"])]
-            proto = STATS_FAMILIES[ent["family"]]
-            # rebuild via treedef of a zero instance with matching structure
-            import dataclasses as dc
-
-            fields = [f.name for f in dc.fields(proto)]
-            stats = proto(**dict(zip(fields, leaves)))
-            store.put(ent["family"], Range(ent["lo"], ent["hi"]), stats,
-                      meta=ent.get("meta", {}), model_id=ent["model_id"])
-        return store
+        return super().load(path, verify=verify, byte_budget=byte_budget)

@@ -9,13 +9,58 @@ Multi-session batched serving (shared segment store, continuous batching):
 
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-67b --reduced \
       --doc-len 1024 --sessions 6 --shared-docs 2 --requests 2 --new-tokens 8
+
+Warm restarts: ``--store-dir`` makes the segment store durable — on
+startup an existing snapshot is reloaded (the replayed traffic is served
+from the warm segments instead of re-prefilled), ``--snapshot-every N``
+re-snapshots after every N request rounds, and a final snapshot is always
+taken on exit.  Snapshots are atomic (temp dir + rename), so a crash
+mid-snapshot leaves the previous complete snapshot in place:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-67b --reduced \
+      --doc-len 1024 --sessions 4 --requests 2 --store-dir /tmp/kvstore \
+      --snapshot-every 1
 """
 from __future__ import annotations
 
 import argparse
+from pathlib import Path
 
 import jax
 import numpy as np
+
+
+def _load_store(args, budget):
+    """Reload the segment store from ``--store-dir`` if a snapshot exists.
+
+    Documents are content-keyed everywhere (including single-session mode,
+    see :func:`run_single`), so a snapshot taken over different documents
+    simply yields no hits rather than stale KV.  Model parameters are
+    *not* part of segment identity: a snapshot is only valid for the
+    (arch, seed) it was taken under.
+    """
+    if not args.store_dir:
+        return None
+    from repro.serve.kv_cache import SegmentStore
+
+    try:
+        store = SegmentStore.load(args.store_dir, byte_budget=budget,
+                                  policy=args.eviction_policy)
+    except FileNotFoundError:
+        return None       # no snapshot yet: first run populates it
+    print(f"warm start: reloaded {len(store)} segments "
+          f"({store.nbytes()/1e6:.1f} MB, {len(store.doc_ids())} documents) "
+          f"from {args.store_dir}")
+    return store
+
+
+def _snapshot(store, args, *, final: bool = False) -> None:
+    if not args.store_dir:
+        return
+    store.save(args.store_dir)
+    if final:
+        print(f"snapshot: {len(store)} segments ({store.nbytes()/1e6:.1f} MB) "
+              f"-> {args.store_dir}")
 
 
 def _extras(cfg):
@@ -35,15 +80,28 @@ def run_single(args, cfg, model, params, rng) -> None:
     from repro.serve.engine import ServeEngine
 
     doc = rng.integers(0, cfg.vocab_size, args.doc_len).astype(np.int32)
-    eng = ServeEngine(model, params, doc, extras=_extras(cfg),
+    budget = args.byte_budget if args.byte_budget > 0 else None
+    store = _load_store(args, budget)
+    store_kw = (dict(store=store) if store is not None
+                else dict(byte_budget=budget,
+                          eviction_policy=args.eviction_policy))
+    extras = _extras(cfg)
+    # content-keyed doc_id (not the historical constant "doc"): a durable
+    # snapshot reloaded against a different document must miss, not serve
+    # the previous document's KV
+    from repro.serve.session import doc_key
+
+    eng = ServeEngine(model, params, doc, extras=extras,
                       chunk_tokens=args.chunk_tokens,
-                      byte_budget=args.byte_budget if args.byte_budget > 0 else None,
-                      eviction_policy=args.eviction_policy)
+                      doc_id=doc_key(doc, extras), **store_kw)
     for i in range(args.requests):
         L = int(rng.integers(args.doc_len // 4, args.doc_len))
         toks, plan = eng.generate(L, args.new_tokens, greedy=False, seed=i)
         print(f"req {i}: prefix {L:6d}  reused-models {len(plan.models_used):3d}  "
               f"tokens {toks[:8]}…")
+        if args.snapshot_every and (i + 1) % args.snapshot_every == 0:
+            _snapshot(eng.store, args)
+    _snapshot(eng.store, args, final=True)
     s = eng.stats
     print(f"\n{s.requests} requests: reuse {s.reuse_frac:.1%} "
           f"({s.tokens_reused} reused / {s.tokens_computed} computed), "
@@ -60,11 +118,15 @@ def run_multi(args, cfg, model, params, rng) -> None:
     unique_docs = [rng.integers(0, cfg.vocab_size, args.doc_len).astype(np.int32)
                    for _ in range(args.sessions - n_shared)]
     budget = args.byte_budget if args.byte_budget > 0 else None
+    store = _load_store(args, budget)
+    store_kw = (dict(store=store) if store is not None
+                else dict(byte_budget=budget,
+                          eviction_policy=args.eviction_policy))
     mgr = SessionManager(model, params, chunk_tokens=args.chunk_tokens,
-                         byte_budget=budget, decode_bucket=args.chunk_tokens,
+                         decode_bucket=args.chunk_tokens,
                          max_batch=args.max_batch,
-                         eviction_policy=args.eviction_policy,
-                         decode_materialize=not args.no_decode_materialize)
+                         decode_materialize=not args.no_decode_materialize,
+                         **store_kw)
     extras = _extras(cfg)
     # the first `n_shared` sessions all serve one document; the rest get unique docs
     sids = []
@@ -82,7 +144,10 @@ def run_multi(args, cfg, model, params, rng) -> None:
                               seed=r * 1000 + i)
             assert plan.validate_telescoping()
         mgr.run()
+        if args.snapshot_every and (r + 1) % args.snapshot_every == 0:
+            _snapshot(mgr.store, args)
     wall = time.perf_counter() - t0
+    _snapshot(mgr.store, args, final=True)
 
     agg = mgr.aggregate_stats()
     st = mgr.store
@@ -123,6 +188,16 @@ def main() -> None:
     ap.add_argument("--no-decode-materialize", action="store_true",
                     help="disable writing decode-generated KV back into the "
                          "segment store")
+    ap.add_argument("--store-dir", default="",
+                    help="directory for durable segment-store snapshots; an "
+                         "existing snapshot is reloaded on startup (warm "
+                         "restart) and a final snapshot is written on exit. "
+                         "Documents are content-keyed, but the snapshot is "
+                         "only valid for the model (arch/seed) it was taken "
+                         "under")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="with --store-dir: re-snapshot the store every N "
+                         "request rounds (0 = only on exit)")
     args = ap.parse_args()
 
     from repro.configs import get_config, reduced

@@ -38,7 +38,7 @@ from repro.core.optimizer import Plan, baseline_plan, shortest_plan
 from repro.kernels.common import bucket_len
 
 from .kv_cache import (DEFAULT_DOC, SegmentStore, cache_len, chunk_segment,
-                       concat_caches, insert_cache, pad_cache_to, slice_cache)
+                       insert_cache, pad_cache_to, slice_cache)
 
 
 @dataclass
@@ -79,7 +79,10 @@ class PrefixCacheBuilder:
       * ``lowerings`` counts actual jit traces per entry point (the
         wrapper body only runs while tracing), which is what
         ``tests/test_prefill_recompile.py`` pins down: cold prefill cost
-        is O(#buckets) executables, not O(#chunks).
+        is O(#buckets) executables, not O(#chunks) — and, with the store
+        holding bucket-padded segments (PR 4), the *reuse* path's
+        ``insert`` executables are O(#bucket pairs), not O(#distinct
+        segment lengths).
 
     Cost-model hooks (PR 3): ``self.cost`` is the *unified*
     :class:`~repro.core.cost.CostModel` (serving calibration via
@@ -165,6 +168,15 @@ class PrefixCacheBuilder:
         plan = self.plan_prefix(length, doc_id=doc_id, stats=stats)
         steps = sorted(plan.steps, key=lambda s: s.rng.lo)  # DAG path is ordered
         cap = bucket_len(max(length, capacity or 0), self.seq_bucket)
+        # bucket-padded segments are inserted whole (their padded tail is
+        # overwritten by the next step or causal-masked), so the cache
+        # needs headroom for every reuse step's *capacity*, not just its
+        # valid end — dynamic_update_slice clamps out-of-range starts,
+        # which would silently corrupt prefix rows
+        for st in steps:
+            if st.model_id is not None:
+                end = st.rng.lo + self.store.capacity(st.model_id)
+                cap = max(cap, bucket_len(end, self.seq_bucket))
         caches = None
         t0 = time.perf_counter()
         with self.store.pinned(plan.models_used):
@@ -172,12 +184,12 @@ class PrefixCacheBuilder:
                 if st.model_id is not None:
                     seg = self.store.get(st.model_id, requester=requester)
                     if caches is None:
-                        caches = seg.caches
-                    elif cache_len(caches) == st.rng.lo:
-                        # still exact-length (segments only so far): concat
-                        caches = concat_caches(caches, seg.caches)
+                        # plan anchor at 0: adopt the segment (incl. its
+                        # state leaves) and grow to the request capacity
+                        caches = pad_cache_to(seg.caches, cap)
                     else:
-                        # already padded to cap: write the segment in place
+                        # shape-stable insert: one executable per (cache
+                        # bucket, segment bucket) pair, not per valid length
                         caches = self._jit_insert(
                             caches, seg.caches, jnp.asarray(st.rng.lo, jnp.int32))
                     stats.tokens_reused += st.rng.size
@@ -329,10 +341,13 @@ class ServeEngine:
         cost_model = cost_model if cost_model is not None else serve_cost_model()
         if store is None:
             # the engine-owned store evicts with the same cost model the
-            # planner prices plans with (one F/C vocabulary end to end)
+            # planner prices plans with (one F/C vocabulary end to end),
+            # and buckets stored segments at the builder's seq granularity
+            # so warm hits reuse the builder's compiled insert executables
             store = SegmentStore(byte_budget=byte_budget,
                                  cost_model=cost_model,
-                                 policy=eviction_policy)
+                                 policy=eviction_policy,
+                                 seq_bucket=seq_bucket)
         self.store = store
         self.builder = PrefixCacheBuilder(model, params, self.store,
                                           chunk_tokens=chunk_tokens,

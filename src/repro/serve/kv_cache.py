@@ -14,15 +14,19 @@ segment's SSD entry stores the state *at the segment end*, valid only when
 every earlier position is covered by the plan (always true for DAG plans
 anchored at 0).
 
-Stored-segment shape invariants (established in PR 2, relied on by every
+Stored-segment shape invariants (bucketed layout; relied on by every
 consumer here):
 
   * stored segment trees are **layer scan-stacked**, so SEQ leaves carry
     the document axis at axis 2 — ``(layers, batch, seq, ...)`` — and
     batch is always 1 for store-resident segments;
-  * segments are stored at **exact length** (``rng.size`` along axis 2);
-    padding to a bucketed capacity happens only in live request caches
-    (``pad_cache_to``), never in the store;
+  * segments are stored **padded to a bucket capacity** along axis 2 —
+    ``bucket_len(rng.size, store.seq_bucket)`` — with the exact valid
+    length recorded on the entry (``StoredSegment.valid == rng.size``);
+    rows past the valid length are garbage the consumers overwrite or
+    causal-mask away.  This extends the compile-once discipline to the
+    *reuse* path: the jitted ``insert_cache`` sees O(#buckets) distinct
+    segment shapes instead of one shape per distinct segment length;
   * running-state leaves (``conv``/``ssm``) hold the state at the
     segment's *end*; constant leaves (``ck``/``cv``) are prefix-invariant.
 
@@ -33,9 +37,16 @@ with ``policy="lru"`` available for comparison — and gains :meth:`alias`
 so decode-time materialization can publish a generated continuation as a
 new content-keyed document whose prefix segments are shared with the base
 document rather than recomputed or copied.
+
+Durability (PR 4): the store round-trips through the shared npz-plus-
+manifest layer in :class:`repro.core.store.PinnedStore` — content-keyed
+``doc_id``s make the manifest natural — so a restarted server reloads its
+warm segments, retention metadata (hits, last-touch; pins excluded), and
+the observed per-document reuse rates that drive admission priors.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 from functools import cached_property
@@ -45,9 +56,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost import CostModel
+from repro.core.cost import CostModel, serve_cost_model
 from repro.core.descriptors import DescriptorIndex, Range
-from repro.core.store import PinnedStore
+from repro.core.store import PinnedStore, flatten_tree, unflatten_tree
 # the model layer owns the cache-leaf taxonomy (it creates the entries);
 # re-exported here under the serve layer's historical names.  In *stored*
 # segment trees layers are scan-stacked, so SEQ leaves carry the document
@@ -115,12 +126,21 @@ def pad_cache_to(caches, target: int):
 
 
 def insert_cache(caches, seg, start):
-    """Write an exact-length segment into a capacity-padded cache at ``start``.
+    """Write a (bucket-padded) segment into a capacity-padded cache at
+    ``start``.
 
-    The padded-cache counterpart of :func:`concat_caches` — used when a
-    reuse step lands after a gap has already forced padding to the bucket
-    capacity, so concatenation would mis-size the sequence axis.  ``start``
-    may be a traced scalar (the caller jits this per segment-length).
+    The shape-stable workhorse of the reuse path: ``start`` may be a
+    traced scalar and ``seg``'s SEQ leaves ride at a bucketed capacity, so
+    the caller jits this once per (cache bucket, segment bucket) pair —
+    not per distinct segment length.  The segment's rows past its valid
+    length are garbage; callers apply inserts in ascending document order
+    so each step's valid rows overwrite the previous step's padded tail,
+    and whatever garbage survives past the final valid length is excluded
+    by causal masking (PR 2's padded-cache discipline).  The caller must
+    guarantee ``start + seg_capacity <= cache_capacity`` —
+    ``dynamic_update_slice`` *clamps* out-of-range starts, which would
+    silently corrupt prefix rows (``PrefixCacheBuilder`` sizes the cache
+    with bucket headroom for exactly this reason).
     State and constant leaves are taken from the (later) segment, matching
     concat semantics: a segment's stored SSD state is the running state at
     its own end, valid because plan steps apply in document order.
@@ -164,8 +184,13 @@ DEFAULT_DOC = "doc"
 class StoredSegment:
     seg_id: str
     rng: Range
+    #: cache tree with SEQ leaves padded to ``capacity`` along axis 2; rows
+    #: in ``[valid, capacity)`` are garbage consumers overwrite or mask
     caches: Any
     doc_id: str = DEFAULT_DOC
+    #: exact number of valid positions (``rng.size``); the padded tail
+    #: beyond it carries no information
+    valid: int = 0
     created_by: Optional[int] = None   # session id that materialized it
     hits: int = 0
     cross_session_hits: int = 0
@@ -175,10 +200,21 @@ class StoredSegment:
     #: segment (decode-time forks share their base document's prefix)
     aliases: set = field(default_factory=set)
 
+    def __post_init__(self):
+        if not self.valid:
+            self.valid = self.rng.size
+
+    @property
+    def capacity(self) -> int:
+        """Bucketed SEQ-axis length the segment occupies (0 if pure-state)."""
+        return cache_len(self.caches)
+
     @cached_property
     def nbytes(self) -> int:
         # caches are immutable once stored; computed once so eviction scans
-        # (which score every candidate) never re-walk the leaf tree
+        # (which score every candidate) never re-walk the leaf tree.  This
+        # is the *padded* residency — what the byte budget actually pays —
+        # not the valid slice.
         return cache_nbytes(self.caches)
 
     def doc_ids(self) -> set:
@@ -200,12 +236,24 @@ class SegmentStore(PinnedStore):
 
     def __init__(self, byte_budget: Optional[int] = None, *,
                  cost_model: Optional[CostModel] = None,
-                 policy: Optional[str] = None) -> None:
+                 policy: Optional[str] = None,
+                 seq_bucket: int = 64,
+                 admit_prior: Optional[str] = None) -> None:
+        # a serving store's default calibration is the serving one — a
+        # standalone-constructed store (e.g. SegmentStore.load at process
+        # start) must price F/C like the engines that will adopt it, or
+        # the planner would re-prefill everything the snapshot holds
+        if cost_model is None:
+            cost_model = serve_cost_model()
         super().__init__(cost_model=cost_model, policy=policy)
         self._indexes: dict[str, DescriptorIndex] = {}
         self._segs: dict[str, StoredSegment] = {}
         self._seq = 0
         self.byte_budget = byte_budget
+        #: SEQ-axis bucket granularity stored segments are padded to; match
+        #: the decode scheduler's token bucket so the store's shapes are
+        #: the shapes the jitted reuse path already compiles for
+        self.seq_bucket = seq_bucket
         self.evictions = 0
         self.evicted_bytes = 0
         self.cross_session_hits = 0
@@ -214,6 +262,15 @@ class SegmentStore(PinnedStore):
         #: lineages cannot grow a segment's metadata without bound
         self.max_aliases = 64
         self.alias_skips = 0
+        #: per-document observed traffic: doc_id -> [segments put, hits] —
+        #: the empirical reuse signal behind ``admission_prior``
+        self._doc_stats: dict[str, list[int]] = {}
+        if admit_prior is None:
+            admit_prior = os.environ.get("REPRO_ADMIT_PRIOR", "observed")
+        if admit_prior not in ("observed", "static"):
+            raise ValueError(f"unknown admission prior {admit_prior!r}; "
+                             f"expected 'observed' or 'static'")
+        self.admit_prior = admit_prior
 
     def index(self, doc_id: str = DEFAULT_DOC) -> DescriptorIndex:
         if doc_id not in self._indexes:
@@ -223,25 +280,88 @@ class SegmentStore(PinnedStore):
     def doc_ids(self) -> list[str]:
         return list(self._indexes)
 
+    def bucket_capacity(self, n: int) -> int:
+        """SEQ-axis capacity a segment of ``n`` valid positions occupies."""
+        from repro.kernels.common import bucket_len
+
+        return bucket_len(n, self.seq_bucket)
+
+    def capacity(self, sid: str) -> int:
+        """Stored SEQ capacity of ``sid`` — *without* counting as a hit
+        (planning peeks at capacities to size the destination cache)."""
+        return self._segs[sid].capacity
+
     def put(self, rng: Range, caches, *, doc_id: str = DEFAULT_DOC,
-            created_by: Optional[int] = None) -> str:
-        self._seq += 1
-        sid = f"kv:{doc_id}:{rng.lo}-{rng.hi}#{self._seq}"
-        self._segs[sid] = StoredSegment(sid, rng, caches, doc_id=doc_id,
-                                        created_by=created_by)
-        self.index(doc_id).add(sid, rng)
+            created_by: Optional[int] = None,
+            seg_id: Optional[str] = None) -> str:
+        """Store a segment covering ``rng``, padded to the bucket capacity.
+
+        ``caches`` may arrive at the exact valid length (the common case:
+        a fresh ``slice_cache``), already at this store's bucket capacity
+        (decode write-back pads before the admission check so admission
+        prices resident bytes), or at any other length ≥ ``rng.size``
+        (e.g. reloading a snapshot taken under a different bucket) — the
+        store normalizes to ``bucket_capacity(rng.size)`` so every
+        resident segment obeys the bucketed-layout invariant.
+        """
+        cap = self.bucket_capacity(rng.size)
+        cur = cache_len(caches)
+        if cur and cur != cap:
+            if cur < rng.size:
+                raise ValueError(
+                    f"segment caches cover {cur} positions but the "
+                    f"descriptor claims {rng.size}")
+            if cur > cap:
+                caches = slice_cache(caches, 0, rng.size)
+            caches = pad_cache_to(caches, cap)
+        if seg_id is None:
+            self._seq += 1
+            seg_id = f"kv:{doc_id}:{rng.lo}-{rng.hi}#{self._seq}"
+        self._segs[seg_id] = StoredSegment(seg_id, rng, caches, doc_id=doc_id,
+                                           valid=rng.size,
+                                           created_by=created_by)
+        self.index(doc_id).add(seg_id, rng)
+        self._doc_stats.setdefault(doc_id, [0, 0])[0] += 1
         self._maybe_evict()
-        return sid
+        return seg_id
 
     def get(self, sid: str, *, requester: Optional[int] = None) -> StoredSegment:
         seg = self._segs[sid]
         seg.last_used_s = time.time()
         seg.hits += 1
+        self._doc_stats.setdefault(seg.doc_id, [0, 0])[1] += 1
         if requester is not None and seg.created_by is not None \
                 and requester != seg.created_by:
             seg.cross_session_hits += 1
             self.cross_session_hits += 1
         return seg
+
+    # -- admission priors from observed traffic ----------------------------
+    def observed_reuses(self, doc_id: str) -> float:
+        """Smoothed per-document reuse rate: hits per stored segment.
+
+        One pseudo-observation at the cost model's static prior keeps a
+        fresh document's estimate equal to the static behaviour (a fork
+        nobody has revisited yet is admitted exactly as before), while a
+        tenant with real traffic converges to its empirical rate — one-off
+        documents decay toward 0, hot documents climb past 1.
+        """
+        puts, hits = self._doc_stats.get(doc_id, (0, 0))
+        return (hits + self.cost.expected_reuses) / (puts + 1.0)
+
+    def admission_prior(self, doc_id: str) -> float:
+        """Expected future reuses for a new segment of ``doc_id`` — the
+        observed rate under ``admit_prior="observed"`` (default), the cost
+        model's static ``expected_reuses`` under ``"static"`` (or
+        ``REPRO_ADMIT_PRIOR=static``)."""
+        if self.admit_prior == "static":
+            return self.cost.expected_reuses
+        return self.observed_reuses(doc_id)
+
+    def _expected_reuses(self, entry: StoredSegment) -> float:
+        # retention scores share the admission prior: segments of documents
+        # whose traffic actually returns outscore one-off tenants' segments
+        return self.admission_prior(entry.doc_id)
 
     def alias(self, src_doc: str, dst_doc: str, *,
               upto: Optional[int] = None) -> int:
@@ -288,6 +408,10 @@ class SegmentStore(PinnedStore):
         segments dropped.  Safe to call for unknown ids (no-op).
         """
         idx = self._indexes.pop(doc_id, None)
+        # a retired fork's traffic history dies with it (its content key
+        # can never be requested again), keeping _doc_stats bounded along
+        # generation chains just like the alias sets
+        self._doc_stats.pop(doc_id, None)
         if idx is None:
             return 0
         dropped = 0
@@ -333,3 +457,86 @@ class SegmentStore(PinnedStore):
                 # server; drop emptied indexes so _indexes stays bounded
                 del self._indexes[doc_id]
         self.evicted_bytes += victim.nbytes
+
+    # -- persistence (PinnedStore hooks) -----------------------------------
+    # Segments round-trip through the shared npz-plus-manifest machinery in
+    # repro.core.store.PinnedStore: one entry file per segment (the cache
+    # tree flattened via flatten_tree, structure recorded in the manifest),
+    # plus store-level metadata — the bucket granularity (stored shapes are
+    # only reusable under the bucket they were padded for), the id
+    # sequence, and the observed per-document traffic stats so admission
+    # priors survive a restart.  created_by is process-local (a session
+    # id) and is deliberately dropped.
+
+    def _serialize_entry(self, seg: StoredSegment) -> tuple[dict, dict]:
+        spec, leaves = flatten_tree(seg.caches)
+        arrays = {f"leaf_{j}": np.asarray(x) for j, x in enumerate(leaves)}
+        record = {
+            "seg_id": seg.seg_id,
+            "doc_id": seg.doc_id,
+            "lo": seg.rng.lo,
+            "hi": seg.rng.hi,
+            "valid": seg.valid,
+            "capacity": seg.capacity,
+            "tree": spec,
+            "aliases": sorted(seg.aliases),
+            "cross_session_hits": seg.cross_session_hits,
+        }
+        return arrays, record
+
+    def _deserialize_entry(self, rec: dict, arrays) -> str:
+        leaves = [arrays[f"leaf_{j}"] for j in range(len(arrays.files))]
+        caches = unflatten_tree(rec["tree"], leaves, leaf_fn=jnp.asarray)
+        rng = Range(rec["lo"], rec["hi"])
+        sid = self.put(rng, caches, doc_id=rec["doc_id"],
+                       seg_id=rec["seg_id"])
+        # a tighter budget than the snapshot's can evict the segment on
+        # its own insertion (fresh entries score worst); shed it quietly —
+        # the base load guards its retention restore the same way
+        seg = self._segs.get(sid)
+        if seg is None:
+            return sid
+        seg.cross_session_hits = int(rec.get("cross_session_hits", 0))
+        for alias_doc in rec.get("aliases", []):
+            seg.aliases.add(alias_doc)
+            self.index(alias_doc).add(sid, rng)
+        return sid
+
+    def _store_meta(self) -> dict:
+        return {
+            "seq_bucket": self.seq_bucket,
+            "seq": self._seq,
+            "doc_stats": {d: list(v) for d, v in self._doc_stats.items()},
+        }
+
+    def _apply_store_meta(self, meta: dict) -> None:
+        # the manifest's bucket wins: resident shapes were padded for it,
+        # and reloading under a different bucket would re-pad every segment
+        self.seq_bucket = int(meta.get("seq_bucket", self.seq_bucket))
+
+    def _finish_load(self, meta: dict) -> None:
+        # load-time puts counted themselves into _doc_stats; the snapshot's
+        # observed traffic is the honest history, so restore it wholesale
+        ds = meta.get("doc_stats")
+        if ds is not None:
+            self._doc_stats = {d: [int(p), int(h)] for d, (p, h) in ds.items()}
+        self._seq = max(self._seq, int(meta.get("seq", 0)))
+        super()._finish_load(meta)
+
+    @classmethod
+    def load(cls, path, *, byte_budget: Optional[int] = None,
+             cost_model: Optional[CostModel] = None,
+             policy: Optional[str] = None,
+             admit_prior: Optional[str] = None,
+             verify: bool = True) -> "SegmentStore":
+        """Rebuild a serving store from a :meth:`PinnedStore.save` snapshot.
+
+        The snapshot dictates ``seq_bucket`` (stored shapes are only
+        shape-stable under the bucket they were padded for); budget, cost
+        model, and policy are fresh runtime choices.  Loaded leaves are
+        moved onto the default device eagerly so the first warm hit pays
+        no host-to-device copy inside the jitted insert path.
+        """
+        return super().load(path, verify=verify, byte_budget=byte_budget,
+                            cost_model=cost_model, policy=policy,
+                            admit_prior=admit_prior)

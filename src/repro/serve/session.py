@@ -146,15 +146,40 @@ class SessionManager:
                  decode_bucket: int = 64,
                  max_batch: int = 8,
                  eviction_policy: Optional[str] = None,
-                 decode_materialize: Optional[bool] = None) -> None:
+                 decode_materialize: Optional[bool] = None,
+                 store: Optional[SegmentStore] = None) -> None:
         self.model = model
         self.params = params
+        if store is not None and byte_budget is not None:
+            raise ValueError(
+                "pass byte_budget only when the manager owns its store; a "
+                "shared/reloaded store's budget is set where it is created")
+        if store is not None and eviction_policy is not None:
+            raise ValueError(
+                "pass eviction_policy only when the manager owns its store; "
+                "a shared/reloaded store's policy is set where it is created")
+        if store is not None and cost_model is not None \
+                and cost_model is not store.cost:
+            # overwriting an adopted store's cost model would silently
+            # reprice admission/eviction for every other manager sharing
+            # it — same contract as byte_budget/eviction_policy above
+            raise ValueError(
+                "pass cost_model only when the manager owns its store (or "
+                "pass the store's own cost model); a shared/reloaded "
+                "store's pricing is set where the store is created")
         # one cost model prices everything: planner edges, decode-segment
-        # admission, and the store's eviction victim scores
-        self.cost = cost_model if cost_model is not None else serve_cost_model()
-        self.store = SegmentStore(byte_budget=byte_budget,
-                                  cost_model=self.cost,
-                                  policy=eviction_policy)
+        # admission, and the store's eviction victim scores.  When an
+        # existing store is adopted (warm restart / shared deployment),
+        # inherit the store's so they cannot disagree.
+        if store is not None:
+            self.cost = store.cost
+        else:
+            self.cost = cost_model if cost_model is not None else serve_cost_model()
+            store = SegmentStore(byte_budget=byte_budget,
+                                 cost_model=self.cost,
+                                 policy=eviction_policy,
+                                 seq_bucket=decode_bucket)
+        self.store = store
         # prefill pads caches to the same token buckets batched decode uses,
         # so a freshly built prefix drops into a decode pack without a
         # reshape and prefill executables are shared across requests
@@ -341,8 +366,15 @@ class SessionManager:
         n_gen = end - start
         if n_gen <= 0:
             return  # 1-token request: nothing was ever decoded into the cache
-        seg = slice_cache(s.caches, start, end)
-        if not self.cost.admit(n_gen, cache_nbytes(seg)):
+        # emit a bucket-shaped segment: pad to the store's capacity *before*
+        # the admission check so admission prices the bytes that would
+        # actually become resident, and the put stores the padded tree
+        # as-is (no second pad).  The admission prior is the document's
+        # observed reuse rate (static under REPRO_ADMIT_PRIOR=static).
+        seg = pad_cache_to(slice_cache(s.caches, start, end),
+                           self.store.bucket_capacity(n_gen))
+        if not self.cost.admit(n_gen, cache_nbytes(seg),
+                               expected_reuses=self.store.admission_prior(ext_id)):
             self.sched.decode_rejects += 1
             return
         self.store.put(Range(start, end), seg, doc_id=ext_id,

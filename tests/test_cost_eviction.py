@@ -29,7 +29,12 @@ from repro.serve.session import SessionManager, doc_key
 
 
 def _seg(tokens: int, width: int = 4):
-    """A fake stored segment covering ``tokens`` positions."""
+    """A fake stored segment covering ``tokens`` positions.
+
+    Byte-budget tests below pass ``seq_bucket`` dividing every segment
+    size they put, so padding-to-bucket never changes the byte accounting
+    the assertions are written against.
+    """
     return {"k": jnp.zeros((1, 1, tokens, 2, width))}
 
 
@@ -68,7 +73,8 @@ def test_cheapest_recompute_per_byte_goes_first():
     the least rebuild time — the big segment (its per-token fixed cost is
     amortized away), not the small one."""
     small, big = _seg(8), _seg(512)
-    store = SegmentStore(byte_budget=cache_nbytes(small) + cache_nbytes(big))
+    store = SegmentStore(byte_budget=cache_nbytes(small) + cache_nbytes(big),
+                         seq_bucket=8)
     sid_small = store.put(Range(0, 8), small, doc_id="a")
     sid_big = store.put(Range(0, 512), big, doc_id="b")
     cm = store.cost
@@ -81,7 +87,8 @@ def test_cheapest_recompute_per_byte_goes_first():
 def test_score_tie_degrades_to_lru():
     """Identical entries (same size, range, hit count) evict oldest-first,
     preserving the pre-cost-model behaviour for homogeneous workloads."""
-    store = SegmentStore(byte_budget=2 * cache_nbytes(_seg(16)) + 1)
+    store = SegmentStore(byte_budget=2 * cache_nbytes(_seg(16)) + 1,
+                         seq_bucket=16)
     first = store.put(Range(0, 16), _seg(16), doc_id="a")
     time.sleep(0.01)
     second = store.put(Range(16, 32), _seg(16), doc_id="b")
@@ -117,7 +124,7 @@ def test_pinned_entry_survives_despite_worst_score():
     """Pins dominate the score: a pinned segment with the cheapest
     recompute-per-byte stays while unpinned, better-scoring entries go."""
     big, small = _seg(512), _seg(8)
-    store = SegmentStore(byte_budget=cache_nbytes(big) + 1)
+    store = SegmentStore(byte_budget=cache_nbytes(big) + 1, seq_bucket=8)
     sid_big = store.put(Range(0, 512), big, doc_id="a")
     with store.pinned([sid_big]):
         sid_small = store.put(Range(0, 8), small, doc_id="b")
@@ -324,7 +331,7 @@ def test_fork_chain_releases_previous_forks(setup):
 def test_aliased_segment_eviction_cleans_every_index():
     """Evicting an aliased segment removes it from the base and the fork
     index alike — the planner can never see ghosts."""
-    store = SegmentStore()
+    store = SegmentStore(seq_bucket=32)
     a = store.put(Range(0, 32), _seg(32), doc_id="base")
     b = store.put(Range(32, 64), _seg(32), doc_id="base")
     assert store.alias("base", "fork", upto=32) == 1  # b reaches past upto

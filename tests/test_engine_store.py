@@ -123,7 +123,7 @@ class TestStore:
         X, y = make_regression(100, d=4, seed=4)
         store.put("linreg", Range(0, 100), LinRegStats.from_data(X, y))
         store.save(tmp_path / "s2")
-        victim = next((tmp_path / "s2").glob("model_*.npz"))
+        victim = next((tmp_path / "s2").glob("entry_*.npz"))
         victim.write_bytes(victim.read_bytes()[:-7] + b"garbage")
         with pytest.raises(IOError):
             ModelStore.load(tmp_path / "s2")

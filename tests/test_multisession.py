@@ -109,7 +109,9 @@ def test_idle_sessions_release_decode_memory(setup):
 
 
 def test_global_eviction_accounting():
-    store = SegmentStore(byte_budget=1)  # evict all but one, across docs
+    # seq_bucket matches the segment size so the byte accounting below is
+    # exact (an 8-token segment occupies exactly its own bytes, unpadded)
+    store = SegmentStore(byte_budget=1, seq_bucket=8)  # evict all but one
     seg = {"k": jnp.zeros((1, 1, 8, 2, 4))}
     store.put(Range(0, 8), seg, doc_id="a")
     store.put(Range(8, 16), seg, doc_id="a")

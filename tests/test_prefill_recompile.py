@@ -100,3 +100,64 @@ def test_multi_gap_plan_single_dispatch_per_gap(setup):
         np.asarray(caches[0]["p0"]["k"][:, :, :256]),
         np.asarray(ref_caches[0]["p0"]["k"][:, :, :256]),
         rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_segment_hits_compile_per_bucket_not_per_length(setup):
+    """The reuse path is shape-stable over (bucket, valid-length) pairs:
+    replaying hits on segments of many distinct ragged lengths compiles the
+    jitted insert_cache once per bucket pair, not once per length.
+
+    Before the bucketed store layout, every distinct stored segment length
+    was a fresh input signature for the jitted insert — a warm server's
+    *cheapest* requests paid the recompiles its cold path had been cured
+    of in PR 2."""
+    cfg, model, params, docs = setup
+    doc = docs[0]
+    ref = ServeEngine(model, params, doc, chunk_tokens=32)
+    ref_caches, _ = ref.build_prefix(256)
+
+    # ragged tiling of [0, 231): five distinct valid lengths, one 32-token
+    # bucket (plus one 64-bucket segment), contiguous so the plan can be
+    # pure reuse
+    bounds = [0, 21, 44, 69, 96, 125, 189, 231]
+    store = SegmentStore(seq_bucket=32)
+    for lo, hi in zip(bounds, bounds[1:]):
+        store.put(Range(lo, hi), slice_cache(ref_caches, lo, hi), doc_id="d")
+    lengths = {hi - lo for lo, hi in zip(bounds, bounds[1:])}
+    assert len(lengths) >= 5, "trace must exercise many distinct lengths"
+
+    eng = ServeEngine(model, params, doc, chunk_tokens=32, seq_bucket=64,
+                      store=store, doc_id="d")
+    caches, plan = eng.build_prefix(231)
+    assert all(s.model_id is not None for s in plan.steps), \
+        "full coverage: every step should be a store hit"
+    seg_buckets = {store.capacity(s.model_id) for s in plan.steps}
+    low = eng.builder.lowerings
+    # O(#bucket pairs): at most one insert executable per distinct stored
+    # segment capacity (one destination capacity here), NOT per length
+    assert low["insert"] <= len(seg_buckets) < len(lengths), low
+    # and the assembled prefix is exact: padded-tail garbage from each
+    # insert was overwritten by the next step's valid rows
+    np.testing.assert_allclose(
+        np.asarray(caches[0]["p0"]["k"][:, :, :231]),
+        np.asarray(ref_caches[0]["p0"]["k"][:, :, :231]),
+        rtol=1e-5, atol=1e-5)
+
+    # a second document tiled at *different* ragged lengths in the same
+    # buckets replays through the same builder with no new executable:
+    # the warm path is compile-once over buckets, like the cold path
+    ref2 = ServeEngine(model, params, docs[1], chunk_tokens=32)
+    ref2_caches, _ = ref2.build_prefix(256)
+    bounds2 = [0, 25, 48, 75, 107, 138, 189, 231]
+    for lo, hi in zip(bounds2, bounds2[1:]):
+        store.put(Range(lo, hi), slice_cache(ref2_caches, lo, hi),
+                  doc_id="d2")
+    assert {hi - lo for lo, hi in zip(bounds2, bounds2[1:])} != lengths
+    before = dict(eng.builder.lowerings)
+    caches2, plan2 = eng.builder.build_prefix(docs[1], 231, doc_id="d2")
+    assert all(s.model_id is not None for s in plan2.steps)
+    assert eng.builder.lowerings == before, (before, eng.builder.lowerings)
+    np.testing.assert_allclose(
+        np.asarray(caches2[0]["p0"]["k"][:, :, :231]),
+        np.asarray(ref2_caches[0]["p0"]["k"][:, :, :231]),
+        rtol=1e-5, atol=1e-5)

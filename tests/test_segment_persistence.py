@@ -1,0 +1,406 @@
+"""Durable segment storage (PR 4): one persistence layer for both stores.
+
+Contracts pinned here:
+
+  * **round-trip fidelity** — a reloaded ``SegmentStore`` holds the same
+    bucket-shaped segments (ranges, valid lengths, capacities, bytes),
+    the same per-document indexes (aliases included), and serves a
+    replayed request with results identical to the pre-restart server;
+  * **retention round-trip** — hits, created/last-used stamps, and the
+    observed per-document traffic stats survive a restart so eviction and
+    admission resume with honest scores; pins (runtime state) do not;
+  * **atomicity** — a crash mid-snapshot leaves the previous complete
+    snapshot loadable (temp-dir-plus-rename discipline), for the
+    analytical ``ModelStore`` and the serving ``SegmentStore`` alike;
+  * **admission priors** — ``admission_prior`` tracks observed reuse per
+    document, with ``REPRO_ADMIT_PRIOR=static`` / ``admit_prior="static"``
+    restoring the cost model's static prior.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cost import serve_cost_model
+from repro.core.descriptors import Range
+from repro.core.store import MANIFEST_NAME, ModelStore
+from repro.core.suffstats import LinRegStats
+from repro.data.synthetic import make_regression
+from repro.serve.kv_cache import SegmentStore, cache_nbytes
+from repro.serve.session import SessionManager
+
+
+def _seg(tokens: int, fill: float = 0.0, width: int = 4):
+    return {"k": jnp.full((1, 1, tokens, 2, width), fill, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# round-trip fidelity
+# ---------------------------------------------------------------------------
+
+def test_segment_store_roundtrip(tmp_path):
+    store = SegmentStore(seq_bucket=16)
+    a = store.put(Range(0, 16), _seg(16, 1.5), doc_id="base")
+    b = store.put(Range(16, 23), _seg(7, 2.5), doc_id="base")  # ragged
+    store.alias("base", "fork", upto=16)
+    store.get(a)
+    store.get(a)
+    store.save(tmp_path / "st")
+
+    loaded = SegmentStore.load(tmp_path / "st")
+    assert len(loaded) == 2
+    assert loaded.seq_bucket == 16
+    assert loaded.nbytes() == store.nbytes()
+    la, lb = loaded._segs[a], loaded._segs[b]
+    assert la.rng == Range(0, 16) and la.valid == 16 and la.capacity == 16
+    # ragged segment reloads bucket-shaped: valid 7, capacity one bucket
+    assert lb.rng == Range(16, 23) and lb.valid == 7 and lb.capacity == 16
+    np.testing.assert_array_equal(
+        np.asarray(la.caches["k"]), np.asarray(store._segs[a].caches["k"]))
+    # indexes round-trip, aliases included
+    assert set(loaded.doc_ids()) == {"base", "fork"}
+    assert a in loaded.index("fork") and b not in loaded.index("fork")
+    assert la.aliases == {"fork"}
+
+
+def test_save_load_serve_parity(tmp_path):
+    from repro.configs import ARCHS, reduced
+    from repro.models.lm import LM
+
+    cfg = reduced(ARCHS["deepseek-67b"])
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    doc = np.random.default_rng(11).integers(0, cfg.vocab_size, 150).astype(np.int32)
+
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32)
+    sid = mgr.add_session(doc)
+    mgr.submit(sid, 150, 3, seed=2)
+    mgr.run()
+    mgr.store.save(tmp_path / "st")
+
+    fresh = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
+                           store=SegmentStore.load(tmp_path / "st"))
+    fid = fresh.add_session(doc)
+    # identical request against the pre-restart manager and the reloaded
+    # one: the restarted server must plan the same hits and produce the
+    # same first-token logits (float32 ULP) and tokens
+    mgr2 = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
+                          store=SegmentStore.load(tmp_path / "st"))
+    mid = mgr2.add_session(doc)
+    fresh.submit(fid, 150, 3, seed=7)
+    mgr2.submit(mid, 150, 3, seed=7)
+    np.testing.assert_allclose(
+        np.asarray(fresh.sessions[fid].logits),
+        np.asarray(mgr2.sessions[mid].logits), rtol=1e-5, atol=1e-6)
+    assert fresh.run()[fid] == mgr2.run()[mid]
+    # and it really served warm: almost nothing was re-prefilled
+    st = fresh.sessions[fid].stats
+    assert st.tokens_reused > 0
+    assert st.tokens_computed <= 2
+    # created_by is process-local and deliberately dropped on save, so a
+    # restarted store must not attribute the replay's hits cross-session
+    assert fresh.store.cross_session_hits == 0
+
+
+def test_serve_parity_vs_prerestart_manager(tmp_path):
+    """The reloaded store serves a replayed trace exactly like the manager
+    that built it (same hit tokens, same rebuilt count)."""
+    from repro.configs import ARCHS, reduced
+    from repro.models.lm import LM
+
+    cfg = reduced(ARCHS["deepseek-67b"])
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    doc = np.random.default_rng(12).integers(0, cfg.vocab_size, 140).astype(np.int32)
+
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
+                         decode_materialize=False)
+    sid = mgr.add_session(doc)
+    mgr.submit(sid, 140, 2, seed=0)
+    first = mgr.run()[sid]
+    mgr.store.save(tmp_path / "st")
+
+    # warm reference: replay on the same (pre-restart) manager
+    mgr.submit(sid, 140, 2, seed=0)
+    warm = mgr.run()[sid]
+    ws = mgr.sessions[sid].stats
+
+    restarted = SessionManager(model, params, chunk_tokens=32,
+                               decode_bucket=32, decode_materialize=False,
+                               store=SegmentStore.load(tmp_path / "st"))
+    rid = restarted.add_session(doc)
+    restarted.submit(rid, 140, 2, seed=0)
+    replay = restarted.run()[rid]
+    rs = restarted.sessions[rid].stats
+    assert replay == warm == first
+    # rebuilt-token count matches the warm server, not the cold baseline
+    assert rs.tokens_computed == ws.tokens_computed - 140
+    assert rs.tokens_reused == ws.tokens_reused
+
+
+# ---------------------------------------------------------------------------
+# retention metadata round-trip
+# ---------------------------------------------------------------------------
+
+def test_retention_metadata_roundtrip(tmp_path):
+    store = SegmentStore(seq_bucket=8)
+    hot = store.put(Range(0, 8), _seg(8), doc_id="hot")
+    cold = store.put(Range(0, 8), _seg(8), doc_id="cold")
+    for _ in range(5):
+        store.get(hot)
+    before = store._segs[hot]
+    store.save(tmp_path / "st")
+
+    loaded = SegmentStore.load(tmp_path / "st")
+    lh, lc = loaded._segs[hot], loaded._segs[cold]
+    assert lh.hits == 5 and lc.hits == 0
+    assert lh.last_used_s == pytest.approx(before.last_used_s)
+    assert lh.created_s == pytest.approx(before.created_s)
+    # observed traffic stats resumed: the hot document keeps its prior
+    assert loaded.observed_reuses("hot") == store.observed_reuses("hot") > 1
+    assert loaded.observed_reuses("cold") < 1
+    # eviction resumes with honest scores: under pressure the cold
+    # segment goes first even though both were "just" reloaded
+    loaded.byte_budget = cache_nbytes(_seg(8)) + 1
+    loaded._maybe_evict()
+    assert hot in loaded and cold not in loaded
+
+
+def test_load_under_tighter_budget_sheds_down(tmp_path):
+    """Reloading a snapshot under a smaller byte budget enforces the new
+    budget instead of overflowing or crashing mid-load."""
+    store = SegmentStore(seq_bucket=8)
+    for i in range(4):
+        store.put(Range(8 * i, 8 * i + 8), _seg(8), doc_id="a")
+    store.save(tmp_path / "st")
+    budget = 2 * cache_nbytes(_seg(8)) + 1
+    loaded = SegmentStore.load(tmp_path / "st", byte_budget=budget)
+    assert 1 <= len(loaded) <= 2
+    assert loaded.nbytes() <= budget
+
+
+def test_load_under_tighter_budget_heterogeneous(tmp_path):
+    """An entry can be evicted by its *own* insertion while loading under
+    a tight budget (fresh big segment, cheapest benefit-per-byte); the
+    deserialize hook must shed it quietly, not crash on the dead id."""
+    store = SegmentStore(seq_bucket=8)
+    small = store.put(Range(0, 8), _seg(8), doc_id="a")
+    big = store.put(Range(0, 512), _seg(512), doc_id="b")
+    store.alias("b", "b-fork", upto=512)  # exercises the post-put hook too
+    store.save(tmp_path / "st")
+    budget = cache_nbytes(_seg(8)) + 1
+    loaded = SegmentStore.load(tmp_path / "st", byte_budget=budget)
+    assert small in loaded and big not in loaded
+
+
+def test_save_sweeps_stale_crash_litter(tmp_path):
+    """Snapshot siblings stranded by crashed saves (any pid) are removed
+    once a save completes, so crashes cannot leak snapshot copies."""
+    store = _segment_store_with_two()
+    target = tmp_path / "st"
+    store.save(target)
+    (tmp_path / ".st.old-999").mkdir()
+    (tmp_path / ".st.tmp-999").mkdir()
+    store.save(target)
+    assert not list(tmp_path.glob(".st.old-*"))
+    assert not list(tmp_path.glob(".st.tmp-*"))
+    assert len(SegmentStore.load(target)) == 2
+
+
+def test_pins_are_not_persisted(tmp_path):
+    store = SegmentStore(seq_bucket=8)
+    sid = store.put(Range(0, 8), _seg(8))
+    with store.pinned([sid]):
+        store.save(tmp_path / "st")
+    loaded = SegmentStore.load(tmp_path / "st")
+    assert loaded._pins == {}
+
+
+def test_model_store_retention_roundtrip(tmp_path):
+    X, y = make_regression(500, d=6, seed=1)
+    st = LinRegStats.from_data(X, y)
+    store = ModelStore()
+    hot = store.put("linreg", Range(0, 250), st)
+    store.put("linreg", Range(250, 500), st)
+    for _ in range(3):
+        store.get(hot)
+    store.save(tmp_path / "ms")
+    loaded = ModelStore.load(tmp_path / "ms")
+    assert {m.model_id: m.hits for m in loaded.models()}[hot] == 3
+
+
+# ---------------------------------------------------------------------------
+# atomicity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_store", [
+    lambda: _segment_store_with_two(),
+    lambda: _model_store_with_two(),
+], ids=["segment", "model"])
+def test_crash_mid_snapshot_preserves_previous(tmp_path, monkeypatch,
+                                               make_store):
+    store = make_store()
+    target = tmp_path / "st"
+    store.save(target)
+    manifest_before = (target / MANIFEST_NAME).read_text()
+
+    # crash while writing the second entry of the next snapshot
+    calls = {"n": 0}
+    real_savez = np.savez
+
+    def exploding_savez(*args, **kwargs):
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            raise OSError("disk full")
+        return real_savez(*args, **kwargs)
+
+    monkeypatch.setattr(np, "savez", exploding_savez)
+    with pytest.raises(OSError):
+        store.save(target)
+    monkeypatch.undo()
+
+    # the previous snapshot is untouched and loadable; no temp litter
+    assert (target / MANIFEST_NAME).read_text() == manifest_before
+    assert not list(tmp_path.glob(".st.tmp-*"))
+    loaded = type(store).load(target)
+    assert len(loaded) == len(store)
+
+
+def _segment_store_with_two():
+    store = SegmentStore(seq_bucket=8)
+    store.put(Range(0, 8), _seg(8), doc_id="a")
+    store.put(Range(8, 16), _seg(8), doc_id="a")
+    return store
+
+
+def _model_store_with_two():
+    X, y = make_regression(200, d=4, seed=2)
+    st = LinRegStats.from_data(X, y)
+    store = ModelStore()
+    store.put("linreg", Range(0, 100), st)
+    store.put("linreg", Range(100, 200), st)
+    return store
+
+
+def test_interrupted_swap_recovers_previous_snapshot(tmp_path):
+    """A crash between save's two directory renames leaves the previous
+    snapshot under the hidden `.old` name; load restores and serves it."""
+    import os
+
+    store = _segment_store_with_two()
+    target = tmp_path / "st"
+    store.save(target)
+    # simulate dying exactly between os.rename(root, old) and
+    # os.rename(tmp, root): the snapshot exists only under `.old`
+    os.rename(target, tmp_path / ".st.old-12345")
+    loaded = SegmentStore.load(target)
+    assert len(loaded) == 2
+    assert (target / MANIFEST_NAME).exists()      # healed in place
+    # with neither root nor a recoverable `.old`, load raises the natural
+    # missing-file error the CLI treats as "no snapshot yet"
+    with pytest.raises(FileNotFoundError):
+        SegmentStore.load(tmp_path / "never_saved")
+
+
+def test_unsupported_manifest_version_raises(tmp_path):
+    store = _segment_store_with_two()
+    target = tmp_path / "st"
+    store.save(target)
+    manifest = json.loads((target / MANIFEST_NAME).read_text())
+    manifest["version"] = 1
+    (target / MANIFEST_NAME).write_text(json.dumps(manifest))
+    with pytest.raises(IOError, match="manifest version"):
+        SegmentStore.load(target)
+
+
+def test_adopted_store_cost_model_conflict_raises():
+    from repro.configs import ARCHS, reduced
+    from repro.models.lm import LM
+
+    cfg = reduced(ARCHS["deepseek-67b"])
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    store = SegmentStore(seq_bucket=32)
+    with pytest.raises(ValueError, match="cost_model"):
+        SessionManager(model, params, store=store,
+                       cost_model=serve_cost_model())
+    # the store's own cost model is fine (explicit no-op)
+    mgr = SessionManager(model, params, store=store, cost_model=store.cost)
+    assert mgr.cost is store.cost
+
+
+def test_corrupt_segment_snapshot_raises(tmp_path):
+    store = _segment_store_with_two()
+    store.save(tmp_path / "st")
+    victim = next((tmp_path / "st").glob("entry_*.npz"))
+    victim.write_bytes(victim.read_bytes()[:-5] + b"xxxxx")
+    with pytest.raises(IOError):
+        SegmentStore.load(tmp_path / "st")
+
+
+def test_manifest_is_json_with_schema(tmp_path):
+    store = _segment_store_with_two()
+    store.save(tmp_path / "st")
+    manifest = json.loads((tmp_path / "st" / MANIFEST_NAME).read_text())
+    assert manifest["version"] == 2
+    assert manifest["kind"] == "SegmentStore"
+    assert manifest["store"]["seq_bucket"] == 8
+    assert len(manifest["entries"]) == 2
+    for rec in manifest["entries"]:
+        assert {"file", "sha256", "retention", "tree",
+                "valid", "capacity"} <= set(rec)
+
+
+# ---------------------------------------------------------------------------
+# admission priors from observed traffic
+# ---------------------------------------------------------------------------
+
+def test_observed_prior_tracks_traffic():
+    store = SegmentStore(seq_bucket=8)
+    cm = store.cost
+    # fresh document: smoothed estimate equals the static prior
+    assert store.admission_prior("new") == pytest.approx(cm.expected_reuses)
+    hot = store.put(Range(0, 8), _seg(8), doc_id="hot")
+    for _ in range(6):
+        store.get(hot)
+    cold = store.put(Range(0, 8), _seg(8), doc_id="cold")
+    assert store.admission_prior("hot") > cm.expected_reuses
+    assert store.admission_prior("cold") < cm.expected_reuses
+    # the static switch restores the flat prior for every document
+    static = SegmentStore(seq_bucket=8, admit_prior="static")
+    s = static.put(Range(0, 8), _seg(8), doc_id="hot")
+    for _ in range(6):
+        static.get(s)
+    assert static.admission_prior("hot") == cm.expected_reuses
+
+
+def test_admit_prior_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_ADMIT_PRIOR", "static")
+    store = SegmentStore(seq_bucket=8)
+    assert store.admit_prior == "static"
+    monkeypatch.setenv("REPRO_ADMIT_PRIOR", "bogus")
+    with pytest.raises(ValueError):
+        SegmentStore(seq_bucket=8)
+
+
+def test_observed_prior_gates_admission():
+    """A borderline segment is admitted for a document whose traffic
+    returns and rejected for one whose traffic never did."""
+    cm = serve_cost_model()
+    store = SegmentStore(seq_bucket=8, cost_model=cm)
+    hot = store.put(Range(0, 8), _seg(8), doc_id="hot")
+    for _ in range(6):
+        store.get(hot)
+    for i in range(3):  # one-off tenant keeps storing, never hitting
+        store.put(Range(8 * i, 8 * i + 8), _seg(8), doc_id="cold")
+    n, nbytes = 8, cache_nbytes(_seg(8))
+    benefit = cm.reuse_benefit_s(n, nbytes)
+    assert benefit > 0
+    # margin sits between the two documents' expected benefits
+    cm.admit_min_benefit_s = benefit * 1.01
+    assert cm.admit(n, nbytes,
+                    expected_reuses=store.admission_prior("hot"))
+    assert not cm.admit(n, nbytes,
+                        expected_reuses=store.admission_prior("cold"))
