@@ -143,25 +143,53 @@ class PinnedStore:
                              f"expected one of {EVICTION_POLICIES}")
         self.policy = policy
         self.decay_half_life_s = decay_half_life_s
+        # incremental-snapshot state: entry key -> manifest record of the
+        # entry's *immutable* (array-backed) part as last written/loaded,
+        # including the npz filename and checksum.  Entry payloads are
+        # frozen at put time, so a key present here means the previous
+        # snapshot's file can be reused verbatim (hard-linked) instead of
+        # re-serialized — see save().
+        self._entry_records: dict[str, dict] = {}
+        self._snapshot_dir: Optional[Path] = None
+        #: {"written": n, "reused": m} for the most recent save()
+        self.last_save: dict[str, int] = {}
+
+    def pin(self, ids: Iterable[str]) -> tuple:
+        """Acquire reentrant pins on ``ids``; returns the token for
+        :meth:`unpin`.
+
+        The non-lexical form of :meth:`pinned`, for holders whose lifetime
+        is an object rather than a block — an async prefill ticket pins the
+        segments its dispatched build references at submit time and releases
+        them only when the build's store insertions are finalized, so
+        eviction can never reclaim an entry an un-joined build still reads.
+        ``None`` ids (gap plan steps) are skipped.
+        """
+        token = tuple(i for i in ids if i is not None)
+        for i in token:
+            self._pins[i] = self._pins.get(i, 0) + 1
+        return token
+
+    def unpin(self, token: Iterable[str]) -> None:
+        """Release pins taken by :meth:`pin` and re-enforce the byte budget
+        (puts while pinned may have left the store over budget with nothing
+        evictable)."""
+        for i in token:
+            n = self._pins.get(i, 0) - 1
+            if n > 0:
+                self._pins[i] = n
+            else:
+                self._pins.pop(i, None)
+        self._maybe_evict()
 
     @contextmanager
     def pinned(self, ids: Iterable[str]):
         """Hold the given entries in the store for the duration of the block."""
-        ids = [i for i in ids if i is not None]
-        for i in ids:
-            self._pins[i] = self._pins.get(i, 0) + 1
+        token = self.pin(ids)
         try:
             yield
         finally:
-            for i in ids:
-                n = self._pins.get(i, 0) - 1
-                if n > 0:
-                    self._pins[i] = n
-                else:
-                    self._pins.pop(i, None)
-            # puts during the block may have left the store over budget with
-            # nothing evictable; enforce the budget now that pins are gone
-            self._maybe_evict()
+            self.unpin(token)
 
     def _entries(self) -> dict:
         raise NotImplementedError
@@ -226,8 +254,21 @@ class PinnedStore:
     # schema, checksums, atomicity, and the retention-metadata round-trip.
 
     def _serialize_entry(self, entry) -> tuple[dict, dict]:
-        """``entry -> (arrays, record)``: npz payload + JSON manifest record."""
+        """``entry -> (arrays, record)``: npz payload + JSON manifest record.
+
+        The record must cover only state that is *frozen* once the entry is
+        stored (descriptor, tree spec, array-derived fields) — it is cached
+        and reused verbatim by incremental saves.  Fields that keep mutating
+        after the put (alias sets, cross-session hit counts, per-model meta)
+        belong in :meth:`_entry_manifest`, which is re-evaluated on every
+        save.
+        """
         raise NotImplementedError
+
+    def _entry_manifest(self, entry) -> dict:
+        """Manifest-only fields that may mutate after the entry's arrays are
+        frozen; merged into the (possibly cached) record at every save."""
+        return {}
 
     def _deserialize_entry(self, record: dict, arrays) -> str:
         """Re-insert one manifest record; returns the entry's store key."""
@@ -245,8 +286,32 @@ class PinnedStore:
         snapshotted under a looser budget sheds down to the current one)."""
         self._maybe_evict()
 
+    def _reuse_entry_file(self, key: str, fpath: Path) -> Optional[dict]:
+        """Try to satisfy one entry of a new snapshot from the previous one.
+
+        Entry payloads are immutable once stored, so if ``key`` was part of
+        the last snapshot this store wrote (or loaded), its npz file can be
+        hard-linked into the new snapshot directory as-is — no device sync
+        to fetch the arrays, no serialization, no re-hash.  Returns a copy
+        of the cached manifest record on success, ``None`` when the entry
+        must be serialized from scratch (never snapshotted, previous file
+        missing, or the filesystem refuses links *and* copies).
+        """
+        cached = self._entry_records.get(key)
+        if cached is None or self._snapshot_dir is None:
+            return None
+        src = self._snapshot_dir / cached["file"]
+        try:
+            os.link(src, fpath)
+        except OSError:
+            try:
+                shutil.copyfile(src, fpath)
+            except OSError:
+                return None
+        return dict(cached)
+
     def save(self, path: str | Path) -> None:
-        """Snapshot the store to ``path`` atomically.
+        """Snapshot the store to ``path`` atomically and incrementally.
 
         Everything — per-entry ``entry_*.npz`` files and ``MANIFEST.json``
         — is written to a temporary sibling directory and renamed into
@@ -255,6 +320,15 @@ class PinnedStore:
         or the new one.  Retention metadata (hits, created/last-used
         stamps) rides in the manifest; pins are runtime state and are
         deliberately not persisted.
+
+        Saves are incremental over the previous snapshot: entries already
+        present there are hard-linked (payloads are frozen at put time, so
+        the bytes cannot have changed) and only entries stored since are
+        serialized, which makes frequent snapshotting (``--snapshot-every
+        1``) cost O(new entries) instead of O(store).  The manifest itself
+        is always rewritten — mutable per-entry fields
+        (:meth:`_entry_manifest`) and retention metadata stay fresh.
+        ``last_save`` records the ``{"written", "reused"}`` split.
         """
         root = Path(path)
         root.parent.mkdir(parents=True, exist_ok=True)
@@ -262,6 +336,8 @@ class PinnedStore:
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
+        written = reused = 0
+        new_records: dict[str, dict] = {}
         try:
             manifest: dict[str, Any] = {
                 "version": MANIFEST_VERSION,
@@ -269,14 +345,21 @@ class PinnedStore:
                 "store": self._store_meta(),
                 "entries": [],
             }
-            for i, entry in enumerate(self._entries().values()):
-                arrays, record = self._serialize_entry(entry)
+            for i, (key, entry) in enumerate(self._entries().items()):
                 fname = f"entry_{i:06d}.npz"
                 fpath = tmp / fname
-                np.savez(fpath, **arrays)
+                record = self._reuse_entry_file(key, fpath)
+                if record is None:
+                    arrays, record = self._serialize_entry(entry)
+                    np.savez(fpath, **arrays)
+                    record["sha256"] = hashlib.sha256(
+                        fpath.read_bytes()).hexdigest()
+                    written += 1
+                else:
+                    reused += 1
                 record["file"] = fname
-                record["sha256"] = hashlib.sha256(
-                    fpath.read_bytes()).hexdigest()
+                new_records[key] = dict(record)
+                record.update(self._entry_manifest(entry))
                 record["retention"] = {
                     "hits": entry.hits,
                     "created_s": entry.created_s,
@@ -302,6 +385,11 @@ class PinnedStore:
         for pattern in (f".{root.name}.old-*", f".{root.name}.tmp-*"):
             for stale in root.parent.glob(pattern):
                 shutil.rmtree(stale, ignore_errors=True)
+        # reused files were hard-linked, so sweeping the old snapshot dir
+        # above cannot invalidate them — the inodes live on under `root`
+        self._entry_records = new_records
+        self._snapshot_dir = root
+        self.last_save = {"written": written, "reused": reused}
 
     @staticmethod
     def _recover_interrupted_swap(root: Path) -> None:
@@ -363,7 +451,14 @@ class PinnedStore:
             entry.created_s = float(ret.get("created_s", entry.created_s))
             entry.last_used_s = float(ret.get("last_used_s",
                                               entry.last_used_s))
+            # seed the incremental-snapshot cache: a load-then-save writes
+            # nothing but the manifest (every entry file is reused).  The
+            # record may carry stale mutable fields; save() re-merges
+            # _entry_manifest over them.
+            store._entry_records[key] = {
+                k: v for k, v in rec.items() if k != "retention"}
         store._finish_load(meta)
+        store._snapshot_dir = root
         return store
 
 
@@ -392,6 +487,8 @@ class ModelStore(PinnedStore):
         if model_id is None:
             self._seq += 1
             model_id = f"{family}:{rng.lo}-{rng.hi}#{self._seq}"
+        # replacing an id invalidates any snapshot file cached under it
+        self._entry_records.pop(model_id, None)
         sm = StoredModel(model_id=model_id, family=family, rng=rng,
                          stats=stats.to_numpy(), meta=meta or {})
         self._models[model_id] = sm
@@ -450,9 +547,13 @@ class ModelStore(PinnedStore):
             "lo": sm.rng.lo,
             "hi": sm.rng.hi,
             "n_leaves": len(leaves),
-            "meta": sm.meta,
         }
         return arrays, record
+
+    def _entry_manifest(self, sm: StoredModel) -> dict:
+        # meta may be amended after the put; keep it out of the cached
+        # immutable record so incremental saves never persist a stale copy
+        return {"meta": sm.meta}
 
     def _deserialize_entry(self, rec: dict, arrays) -> str:
         import dataclasses as dc

@@ -126,6 +126,7 @@ def run_multi(args, cfg, model, params, rng) -> None:
                          decode_bucket=args.chunk_tokens,
                          max_batch=args.max_batch,
                          decode_materialize=not args.no_decode_materialize,
+                         async_prefill=args.async_prefill,
                          **store_kw)
     extras = _extras(cfg)
     # the first `n_shared` sessions all serve one document; the rest get unique docs
@@ -164,6 +165,16 @@ def run_multi(args, cfg, model, params, rng) -> None:
           f"{mgr.sched.pack_rebuilds} pack rebuilds")
     print(f"  decode materialization: {mgr.sched.decode_segments} segments "
           f"admitted, {mgr.sched.decode_rejects} rejected")
+    rep = mgr.report()   # guarded: finite even on an idle/zero-traffic run
+    mode = "async" if mgr.async_prefill else "sync"
+    print(f"  pipeline ({mode} prefill): {rep['tickets_launched']} builds "
+          f"launched, {rep['tickets_joined']} joined "
+          f"(mean join wait {rep['mean_join_wait_s']*1e3:.1f} ms), "
+          f"{rep['overlap_steps']} decode rounds overlapped builds "
+          f"(mean batch {rep['overlap_batch']:.2f})")
+    if args.store_dir and st.last_save:
+        print(f"  snapshot: {st.last_save['written']} entries written, "
+              f"{st.last_save['reused']} reused from the previous snapshot")
 
 
 def main() -> None:
@@ -188,6 +199,17 @@ def main() -> None:
     ap.add_argument("--no-decode-materialize", action="store_true",
                     help="disable writing decode-generated KV back into the "
                          "segment store")
+    ap.add_argument("--async-prefill", dest="async_prefill",
+                    action="store_true", default=None,
+                    help="pipeline prefix builds with decode (default): "
+                         "submit launches the build asynchronously and warm "
+                         "sessions keep decoding until the cold session "
+                         "joins before its first decode")
+    ap.add_argument("--sync-prefill", dest="async_prefill",
+                    action="store_false",
+                    help="monolithic loop: every submit blocks all decoding "
+                         "sessions until its prefix build completes "
+                         "(bitwise-identical tokens and store contents)")
     ap.add_argument("--store-dir", default="",
                     help="directory for durable segment-store snapshots; an "
                          "existing snapshot is reloaded on startup (warm "

@@ -20,6 +20,7 @@ points so compiled executables are shared across every session.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import time
 from dataclasses import dataclass, field
@@ -51,10 +52,44 @@ class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
 
+    # every derived rate below degrades to 0.0 (never NaN/inf) on
+    # zero-traffic runs, so an idle server's report stays printable
     @property
     def reuse_frac(self) -> float:
         tot = self.tokens_reused + self.tokens_computed
         return self.tokens_reused / tot if tot else 0.0
+
+    @property
+    def prefill_tok_s(self) -> float:
+        done = self.tokens_reused + self.tokens_computed
+        return done / self.prefill_s if self.prefill_s > 0 else 0.0
+
+    @property
+    def decode_tok_s(self) -> float:
+        return (self.tokens_decoded / self.decode_s
+                if self.decode_s > 0 else 0.0)
+
+
+@dataclass
+class PendingBuild:
+    """Deferred store side-effects of one dispatched prefix build.
+
+    The plan/dispatch/finalize split behind async prefill: ``build_prefix``
+    with ``defer=True`` launches every gap's device dispatch but records
+    the chunk materializations here instead of inserting them, and pins
+    the plan's reuse segments (``pin_token``) so eviction cannot reclaim
+    an entry the in-flight computation still reads.
+    :meth:`PrefixCacheBuilder.finalize_build` lands the insertions — in
+    the exact order the synchronous path would have — and releases the
+    pins.  Flushing is host-cheap and non-blocking: the recorded trees are
+    lazy jax arrays and the store's byte accounting is shape-metadata only.
+    """
+    doc_id: str
+    requester: Optional[int]
+    #: [(rng, bucket-padded cache tree)] in ascending document order
+    puts: list = field(default_factory=list)
+    pin_token: tuple = ()
+    finalized: bool = False
 
 
 class PrefixCacheBuilder:
@@ -149,7 +184,8 @@ class PrefixCacheBuilder:
                      stats: Optional[ServeStats] = None,
                      materialize: bool = True,
                      requester: Optional[int] = None,
-                     capacity: Optional[int] = None):
+                     capacity: Optional[int] = None,
+                     defer: bool = False):
         """Assemble the KV cache for document[:length] via the cheapest plan.
 
         Returns (caches, plan) with the caches' sequence axis padded to
@@ -162,6 +198,16 @@ class PrefixCacheBuilder:
         still materialized for future requests (paper Alg 2 behaviour).
         Segments the plan references are pinned for the duration so chunk
         puts can never evict them mid-execution.
+
+        With ``defer=True`` this is the *dispatch phase* of the pipeline:
+        all device work is launched (asynchronously — nothing here blocks
+        on it), but chunk materializations are recorded on the returned
+        :class:`PendingBuild` instead of hitting the store, and the plan's
+        reuse segments stay pinned under its ``pin_token``.  The caller
+        owns the finalize phase (:meth:`finalize_build`), which must run
+        before any *other* store insertion so segment ids, admission, and
+        eviction decisions replay exactly as in the synchronous path.
+        Returns ``(caches, plan, pending)``.
         """
         stats = stats if stats is not None else ServeStats()
         extras = extras or {}
@@ -177,49 +223,104 @@ class PrefixCacheBuilder:
             if st.model_id is not None:
                 end = st.rng.lo + self.store.capacity(st.model_id)
                 cap = max(cap, bucket_len(end, self.seq_bucket))
+        pending = PendingBuild(doc_id=doc_id, requester=requester) \
+            if defer else None
+        if not materialize:
+            sink = None
+        elif defer:
+            sink = lambda rng, seg: pending.puts.append((rng, seg))  # noqa: E731
+        else:
+            sink = lambda rng, seg: self.store.put(  # noqa: E731
+                rng, seg, doc_id=doc_id, created_by=requester)
+        if defer:
+            pending.pin_token = self.store.pin(plan.models_used)
+            ctx = contextlib.nullcontext()
+        else:
+            ctx = self.store.pinned(plan.models_used)
         caches = None
         t0 = time.perf_counter()
-        with self.store.pinned(plan.models_used):
-            for st in steps:
-                if st.model_id is not None:
-                    seg = self.store.get(st.model_id, requester=requester)
-                    if caches is None:
-                        # plan anchor at 0: adopt the segment (incl. its
-                        # state leaves) and grow to the request capacity
-                        caches = pad_cache_to(seg.caches, cap)
+        try:
+            with ctx:
+                for st in steps:
+                    if st.model_id is not None:
+                        seg = self.store.get(st.model_id, requester=requester)
+                        if caches is None:
+                            # plan anchor at 0: adopt the segment (incl. its
+                            # state leaves) and grow to the request capacity
+                            caches = pad_cache_to(seg.caches, cap)
+                        else:
+                            # shape-stable insert: one executable per (cache
+                            # bucket, segment bucket) pair, not per valid length
+                            caches = self._jit_insert(
+                                caches, seg.caches, jnp.asarray(st.rng.lo, jnp.int32))
+                        stats.tokens_reused += st.rng.size
                     else:
-                        # shape-stable insert: one executable per (cache
-                        # bucket, segment bucket) pair, not per valid length
-                        caches = self._jit_insert(
-                            caches, seg.caches, jnp.asarray(st.rng.lo, jnp.int32))
-                    stats.tokens_reused += st.rng.size
-                else:
-                    caches = self._fill_gap(
-                        doc, st.rng, caches, cap, extras, doc_id=doc_id,
-                        stats=stats, materialize=materialize,
-                        requester=requester)
+                        caches = self._fill_gap(doc, st.rng, caches, cap, extras,
+                                                stats=stats, sink=sink)
+        except BaseException:
+            # the sync path's context manager releases pins on any failure;
+            # the deferred path must match, or a crashed dispatch leaks its
+            # plan's pins for the life of the store
+            self.abandon_build(pending)
+            raise
         if caches is not None:
             caches = pad_cache_to(caches, cap)
         stats.prefill_s += time.perf_counter() - t0
+        if defer:
+            return caches, plan, pending
         return caches, plan
 
+    def abandon_build(self, pending: Optional[PendingBuild]) -> None:
+        """Release a deferred build's pins without landing its insertions.
+
+        The exception path of the dispatch phase: the recorded trees may
+        reference a failed computation, so they are dropped rather than
+        stored (the next request simply re-prefills those chunks), but the
+        pins must never outlive the build.
+        """
+        if pending is None or pending.finalized:
+            return
+        pending.finalized = True
+        pending.puts = []
+        self.store.unpin(pending.pin_token)
+
+    def finalize_build(self, pending: Optional[PendingBuild]) -> None:
+        """Finalize phase of a deferred build: land the recorded chunk
+        insertions in dispatch order and release the plan's pins.
+
+        Host-cheap and non-blocking (the trees are lazy jax arrays; byte
+        accounting is shape metadata), so the scheduler can flush pending
+        builds without ever waiting on the device.  Idempotent: a build is
+        finalized at most once.
+        """
+        if pending is None or pending.finalized:
+            return
+        pending.finalized = True
+        for rng, seg in pending.puts:
+            self.store.put(rng, seg, doc_id=pending.doc_id,
+                           created_by=pending.requester)
+        pending.puts = []
+        self.store.unpin(pending.pin_token)
+
     def _fill_gap(self, doc, rng: Range, caches, cap: int, extras, *,
-                  doc_id, stats, materialize, requester):
+                  stats, sink):
         """Prefill one uncovered plan step [rng.lo, rng.hi) into ``caches``.
 
         Full chunks run as a single fused ``prefill_extend_many`` dispatch;
         at most one ragged remainder runs as a single ``prefill_extend``.
         Only a cold start at position 0 uses the exact-shape ``prefill``
-        (one compile per distinct first-chunk length).
+        (one compile per distinct first-chunk length).  ``sink`` receives
+        each chunk's materialized segment (None = don't materialize); the
+        synchronous path inserts immediately, the deferred path records
+        for finalize-time insertion.
         """
         lo, hi = rng.lo, rng.hi
         if caches is None and lo == 0:
             first = min(self.chunk, hi)
             batch = {"tokens": jnp.asarray(doc[None, :first]), **extras}
             _, caches = self._jit_prefill(self.params, batch)
-            if materialize:
-                self.store.put(Range(0, first), slice_cache(caches, 0, first),
-                               doc_id=doc_id, created_by=requester)
+            if sink is not None:
+                sink(Range(0, first), slice_cache(caches, 0, first))
             stats.tokens_computed += first
             lo = first
             if lo >= hi:
@@ -240,22 +341,19 @@ class PrefixCacheBuilder:
             _, caches, states = self._jit_extend_many(
                 self.params, caches, jnp.asarray(toks),
                 jnp.asarray(lo, jnp.int32), jnp.asarray(n_full, jnp.int32))
-            if materialize:
+            if sink is not None:
                 for i in range(n_full):
                     a = lo + i * self.chunk
-                    self.store.put(
-                        Range(a, a + self.chunk),
-                        chunk_segment(caches, states, i, a, a + self.chunk),
-                        doc_id=doc_id, created_by=requester)
+                    sink(Range(a, a + self.chunk),
+                         chunk_segment(caches, states, i, a, a + self.chunk))
             stats.tokens_computed += n_full * self.chunk
             lo += n_full * self.chunk
         if lo < hi:                              # ragged remainder chunk
             toks = jnp.asarray(doc[None, lo:hi])
             _, caches = self._jit_extend(self.params, caches, toks,
                                          jnp.asarray(lo, jnp.int32))
-            if materialize:
-                self.store.put(Range(lo, hi), slice_cache(caches, lo, hi),
-                               doc_id=doc_id, created_by=requester)
+            if sink is not None:
+                sink(Range(lo, hi), slice_cache(caches, lo, hi))
             stats.tokens_computed += hi - lo
         return caches
 
@@ -264,7 +362,8 @@ class PrefixCacheBuilder:
                            extras: Optional[dict] = None,
                            stats: Optional[ServeStats] = None,
                            requester: Optional[int] = None,
-                           capacity: Optional[int] = None):
+                           capacity: Optional[int] = None,
+                           defer: bool = False):
         """Cache for [0, prefix_len) plus the logits of its last position.
 
         The last prefix token runs through a 1-token extend so its logits
@@ -272,6 +371,11 @@ class PrefixCacheBuilder:
         completes the cache — correct for running-state (SSD) layers too.
         Pass ``capacity`` (e.g. prefix_len + n_new) so the returned caches
         are already padded to the decode bucket the request will need.
+
+        ``defer=True`` returns ``(logits, caches, plan, pending)`` — the
+        dispatch phase of an async prefill ticket (see
+        :meth:`build_prefix`): everything is launched, nothing is awaited,
+        and the store insertions wait on :meth:`finalize_build`.
         """
         stats = stats if stats is not None else ServeStats()
         extras = extras or {}
@@ -281,20 +385,33 @@ class PrefixCacheBuilder:
             logits, caches = self._jit_prefill(self.params, batch)
             stats.prefill_s += time.perf_counter() - t0
             stats.tokens_computed += prefix_len
-            return logits, caches, baseline_plan(Range(0, prefix_len), self.cost)
-        caches, plan = self.build_prefix(
+            plan = baseline_plan(Range(0, prefix_len), self.cost)
+            if defer:   # nothing to insert or pin; empty finalize for symmetry
+                return logits, caches, plan, PendingBuild(
+                    doc_id=doc_id, requester=requester)
+            return logits, caches, plan
+        built = self.build_prefix(
             doc, prefix_len - 1, doc_id=doc_id, extras=extras, stats=stats,
             materialize=True, requester=requester,
-            capacity=max(prefix_len, capacity or 0))
-        toks = jnp.asarray(doc[None, prefix_len - 1: prefix_len])
-        cur = cache_len(caches)
-        assert cur == 0 or cur >= prefix_len, (
-            f"cache capacity {cur} < prefix {prefix_len}")
-        t0 = time.perf_counter()
-        logits, caches = self._jit_extend(self.params, caches, toks,
-                                          jnp.asarray(prefix_len - 1, jnp.int32))
+            capacity=max(prefix_len, capacity or 0), defer=defer)
+        caches, plan = built[0], built[1]
+        try:
+            toks = jnp.asarray(doc[None, prefix_len - 1: prefix_len])
+            cur = cache_len(caches)
+            assert cur == 0 or cur >= prefix_len, (
+                f"cache capacity {cur} < prefix {prefix_len}")
+            t0 = time.perf_counter()
+            logits, caches = self._jit_extend(
+                self.params, caches, toks,
+                jnp.asarray(prefix_len - 1, jnp.int32))
+        except BaseException:
+            if defer:       # a failed boundary extend must not leak pins
+                self.abandon_build(built[2])
+            raise
         stats.prefill_s += time.perf_counter() - t0
         stats.tokens_computed += 1
+        if defer:
+            return logits, caches, plan, built[2]
         return logits, caches, plan
 
     def prefill_raw(self, batch):

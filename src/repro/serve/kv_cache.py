@@ -174,7 +174,17 @@ def chunk_segment(caches, chunk_states, i: int, lo: int, hi: int):
 
 
 def cache_nbytes(caches) -> int:
-    return sum(np.asarray(x).nbytes for x in jax.tree.leaves(caches))
+    """Total payload bytes of a cache tree, computed from shape metadata.
+
+    Deliberately avoids ``np.asarray``: on a jax array that would block on
+    (and copy to host) the computation producing the leaf, turning every
+    byte-budget check into a synchronization point.  ``.nbytes`` is pure
+    shape/dtype arithmetic on both numpy and jax arrays, so store puts and
+    eviction scans stay non-blocking while async prefill builds are still
+    in flight on the device.
+    """
+    return sum(x.nbytes if hasattr(x, "nbytes") else np.asarray(x).nbytes
+               for x in jax.tree.leaves(caches))
 
 
 DEFAULT_DOC = "doc"
@@ -317,6 +327,8 @@ class SegmentStore(PinnedStore):
         if seg_id is None:
             self._seq += 1
             seg_id = f"kv:{doc_id}:{rng.lo}-{rng.hi}#{self._seq}"
+        # replacing an id invalidates any snapshot file cached under it
+        self._entry_records.pop(seg_id, None)
         self._segs[seg_id] = StoredSegment(seg_id, rng, caches, doc_id=doc_id,
                                            valid=rng.size,
                                            created_by=created_by)
@@ -473,16 +485,24 @@ class SegmentStore(PinnedStore):
         arrays = {f"leaf_{j}": np.asarray(x) for j, x in enumerate(leaves)}
         record = {
             "seg_id": seg.seg_id,
-            "doc_id": seg.doc_id,
             "lo": seg.rng.lo,
             "hi": seg.rng.hi,
             "valid": seg.valid,
             "capacity": seg.capacity,
             "tree": spec,
-            "aliases": sorted(seg.aliases),
-            "cross_session_hits": seg.cross_session_hits,
         }
         return arrays, record
+
+    def _entry_manifest(self, seg: StoredSegment) -> dict:
+        # fields that keep changing after the payload freezes live outside
+        # the cached immutable record, so incremental saves (which reuse
+        # the npz file verbatim) still write current values into every
+        # manifest: alias sets and cross-session hits mutate with traffic,
+        # and doc_id itself is promoted to a surviving alias when
+        # release_doc() retires a fork the segment belonged to
+        return {"doc_id": seg.doc_id,
+                "aliases": sorted(seg.aliases),
+                "cross_session_hits": seg.cross_session_hits}
 
     def _deserialize_entry(self, rec: dict, arrays) -> str:
         leaves = [arrays[f"leaf_{j}"] for j in range(len(arrays.files))]

@@ -26,6 +26,21 @@ the segment's byte cost).  The base document's prefix segments are
 *aliased* into the continuation's descriptor index rather than copied, so
 a follow-up request over generated context plans entirely from the store
 — no re-prefill of text the server itself produced.
+
+Pipelined serving (PR 5): the loop is an explicit three-stage pipeline —
+**admit → prefill → decode**.  ``submit`` (admit) plans the prefix and
+*launches* the build (one async ``prefill_extend_many`` dispatch per plan
+gap — JAX async dispatch means nothing blocks the host), parking the
+session behind a :class:`PrefillTicket`.  The scheduler keeps batching
+already-warm sessions while tickets are in flight; a ticketed session
+*joins* the decode lanes only when its build's result is ready (polled
+without blocking), or when nothing else can decode.  Store insertions of
+the build's chunk segments are deferred to ticket-finalize time and land
+in submit order, and the plan's reuse segments stay pinned until then —
+so token streams *and* store contents are bit-identical to the
+synchronous loop (``async_prefill=False`` /
+``REPRO_ASYNC_PREFILL=0``), which stalls every decoder for the full
+build instead.
 """
 from __future__ import annotations
 
@@ -44,7 +59,7 @@ from repro.core.descriptors import Range
 from repro.core.optimizer import Plan
 from repro.kernels.common import bucket_len
 
-from .engine import PrefixCacheBuilder, ServeStats
+from .engine import PendingBuild, PrefixCacheBuilder, ServeStats
 from .kv_cache import (SEQ_KEYS, SegmentStore, _leaf_key, cache_len,
                        cache_nbytes, pad_cache_to, slice_cache)
 
@@ -64,8 +79,23 @@ def doc_key(doc_tokens: np.ndarray, extras: Optional[dict] = None) -> str:
     return h.hexdigest()[:12]
 
 
-def batch_caches(caches_list: list) -> Any:
-    """Concatenate per-session caches ((L, 1, ...) leaves) along batch."""
+def batch_caches(caches_list: list, *, owned: bool = False) -> Any:
+    """Concatenate per-session caches ((L, 1, ...) leaves) along batch.
+
+    With ``owned=True`` the pack is guaranteed to own its buffers — the
+    donation-safe handoff at the session→decode boundary.
+    ``jnp.concatenate`` of a single operand returns it unchanged, and a
+    session cache can itself alias a store-resident segment (a no-op pad
+    at the plan anchor), so a 1-row pack must copy when the batched
+    decode jit donates its cache operand: donating an aliased buffer
+    would invalidate store bytes under every other session's feet.
+    Callers whose decode never donates (the CPU backend) skip the copy —
+    without donation an aliased immutable buffer is harmless.
+    """
+    if len(caches_list) == 1:
+        if owned:
+            return jax.tree.map(jnp.copy, caches_list[0])
+        return caches_list[0]
     return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *caches_list)
 
 
@@ -96,6 +126,42 @@ def batch_signature(caches) -> tuple:
 
 
 @dataclass
+class PrefillTicket:
+    """One async prefix build in flight between submit and first decode.
+
+    The pipeline's prefill-stage token: ``submit`` creates it after
+    launching the build's device dispatches, the scheduler polls
+    :meth:`ready` (non-blocking) each round, and the owning session enters
+    the decode lanes only after :meth:`SessionManager._join_ticket`.  Two
+    independent completions hang off it:
+
+      * **store finalize** — ``pending`` holds the build's deferred chunk
+        insertions plus the pin token protecting the plan's reuse
+        segments; flushed FIFO (submit order) by the manager so store
+        contents replay the synchronous loop exactly;
+      * **compute join** — the first decode of this session consumes the
+        build's logits/caches, so the join blocks on them (a no-op when
+        the poll already reported ready) and the wait is attributed to
+        the ticket, not to the warm sessions' decode time.
+    """
+    sid: int
+    seq: int                    # FIFO order (= launch index)
+    plan: Plan
+    pending: PendingBuild
+    logits: Any                 # build result the first decode consumes
+    submitted_s: float
+    joined: bool = False
+    join_wait_s: float = 0.0
+
+    def ready(self) -> bool:
+        """Has the dispatched build completed on device?  Never blocks."""
+        try:
+            return bool(self.logits.is_ready())
+        except AttributeError:      # non-jax logits (already concrete)
+            return True
+
+
+@dataclass
 class Session:
     sid: int
     doc_id: str
@@ -115,6 +181,7 @@ class Session:
     key: Any = None
     next_tok: int = -1
     greedy_next: Optional[int] = None  # batched-argmax result from last decode
+    ticket: Optional[PrefillTicket] = None  # un-joined async prefix build
     out_tokens: list = field(default_factory=list)
     plans: list = field(default_factory=list)
 
@@ -130,10 +197,28 @@ class SchedulerStats:
     pack_rebuilds: int = 0
     decode_segments: int = 0    # decode-KV segments admitted to the store
     decode_rejects: int = 0     # ... rejected by the cost-model admission
+    # pipeline (async-prefill) counters
+    tickets_launched: int = 0   # async prefix builds dispatched
+    tickets_joined: int = 0     # ... whose sessions entered decode
+    join_wait_s: float = 0.0    # host time blocked waiting on builds at join
+    overlap_steps: int = 0      # decode rounds run while ≥1 build in flight
+    overlap_rows: int = 0       # decode rows produced in those rounds
 
+    # all derived means guard the zero-traffic case: an idle server's
+    # report prints 0.0, never NaN
     @property
     def mean_batch(self) -> float:
         return self.decode_rows / self.decode_calls if self.decode_calls else 0.0
+
+    @property
+    def overlap_batch(self) -> float:
+        return (self.overlap_rows / self.overlap_steps
+                if self.overlap_steps else 0.0)
+
+    @property
+    def mean_join_wait_s(self) -> float:
+        return (self.join_wait_s / self.tickets_joined
+                if self.tickets_joined else 0.0)
 
 
 class SessionManager:
@@ -147,6 +232,7 @@ class SessionManager:
                  max_batch: int = 8,
                  eviction_policy: Optional[str] = None,
                  decode_materialize: Optional[bool] = None,
+                 async_prefill: Optional[bool] = None,
                  store: Optional[SegmentStore] = None) -> None:
         self.model = model
         self.params = params
@@ -191,6 +277,13 @@ class SessionManager:
             decode_materialize = os.environ.get(
                 "REPRO_DECODE_MATERIALIZE", "1") != "0"
         self.decode_materialize = decode_materialize
+        # admit → prefill → decode pipeline (default): submit launches the
+        # build and the scheduler joins it before the session's first
+        # decode; REPRO_ASYNC_PREFILL=0 / async_prefill=False restores the
+        # stall-on-submit loop (identical tokens and store contents)
+        if async_prefill is None:
+            async_prefill = os.environ.get("REPRO_ASYNC_PREFILL", "1") != "0"
+        self.async_prefill = async_prefill
         self.decode_bucket = decode_bucket
         self.max_batch = max_batch
         # per-request counters live on each Session (folded into
@@ -202,9 +295,20 @@ class SessionManager:
         self._closed_stats = ServeStats()
         self.sessions: dict[int, Session] = {}
         self._next_sid = 0
-        self._jit_decode = jax.jit(model.decode_step)
+        # where the backend supports donation, the decode jit donates its
+        # cache operand — in-place KV updates instead of a full cache copy
+        # per step; pack building then forces owned buffers (see
+        # batch_caches).  The CPU backend doesn't implement donation (it
+        # would only warn), so both the donation and the defensive copy
+        # are skipped there.
+        self._donate_decode = jax.default_backend() != "cpu"
+        self._jit_decode = jax.jit(
+            model.decode_step,
+            donate_argnums=(1,) if self._donate_decode else ())
         # live decode packs: tuple(sids) -> batched caches (padded to a bucket)
         self._packs: dict[tuple[int, ...], Any] = {}
+        # un-finalized async builds, FIFO in submit order
+        self._tickets: list[PrefillTicket] = []
 
     # -- session lifecycle -------------------------------------------------
     def add_session(self, doc_tokens: np.ndarray, *,
@@ -219,9 +323,14 @@ class SessionManager:
         return sid
 
     def close_session(self, sid: int) -> None:
+        # land any deferred builds first: the closing session's own chunk
+        # segments (and everyone else's) must reach the store in submit
+        # order even if it never decoded a token
+        self._flush_tickets()
         self._flush_packs([g for g in self._packs if sid in g])
         s = self.sessions.pop(sid, None)
         if s is not None:
+            s.ticket = None
             if s.mat_pending:
                 # the last request's generated KV outlives the session —
                 # another tenant may continue the same generated document
@@ -230,13 +339,25 @@ class SessionManager:
             # aggregate_stats stays consistent after churn
             _accumulate(self._closed_stats, s.stats)
 
-    # -- request admission -------------------------------------------------
+    # -- request admission (pipeline stage 1) ------------------------------
     def submit(self, sid: int, prefix_len: int, n_new: int, *,
                greedy: bool = True, seed: int = 0) -> Plan:
-        """Plan + build the prefix for one request; decode happens in step()."""
+        """Admit one request: plan the prefix and launch its build.
+
+        Async mode (default) dispatches the build and returns immediately
+        with the plan — the session rides a :class:`PrefillTicket` until
+        the scheduler joins it before its first decode, and the decode
+        lanes keep running in the meantime.  Sync mode blocks here until
+        the build completes (the pre-pipeline loop, kept as the bitwise
+        reference and for `--sync-prefill` benchmarking).
+        """
         s = self.sessions[sid]
         if s.busy:
             raise RuntimeError(f"session {sid} still has {s.remaining} tokens pending")
+        # outstanding builds finalize before this one plans: their chunk
+        # segments are what makes this plan see the same store state the
+        # synchronous loop would have (and their puts must precede ours)
+        self._flush_tickets()
         # a drained session's last pack can survive in _packs under the same
         # group tuple (e.g. it was the only decoder); flush any pack holding
         # this session so stale batched caches are never reused, while
@@ -246,9 +367,26 @@ class SessionManager:
             # last chance to write the previous request's generated KV back
             # before prefix_with_logits replaces the session caches
             self._materialize_decode(s)
-        logits, caches, plan = self.builder.prefix_with_logits(
-            s.doc, prefix_len, doc_id=s.doc_id, extras=s.extras,
-            stats=s.stats, requester=sid, capacity=prefix_len + n_new)
+        if self.async_prefill:
+            logits, caches, plan, pending = self.builder.prefix_with_logits(
+                s.doc, prefix_len, doc_id=s.doc_id, extras=s.extras,
+                stats=s.stats, requester=sid, capacity=prefix_len + n_new,
+                defer=True)
+            self.sched.tickets_launched += 1
+            s.ticket = PrefillTicket(
+                sid=sid, seq=self.sched.tickets_launched, plan=plan,
+                pending=pending, logits=logits,
+                submitted_s=time.perf_counter())
+            self._tickets.append(s.ticket)
+        else:
+            logits, caches, plan = self.builder.prefix_with_logits(
+                s.doc, prefix_len, doc_id=s.doc_id, extras=s.extras,
+                stats=s.stats, requester=sid, capacity=prefix_len + n_new)
+            # the monolithic loop: every decoding session stalls until this
+            # build has fully materialized on device
+            t0 = time.perf_counter()
+            jax.block_until_ready(logits)
+            s.stats.prefill_s += time.perf_counter() - t0
         s.caches = caches
         s.logits = logits
         s.greedy_next = None
@@ -263,14 +401,62 @@ class SessionManager:
         s.stats.requests += 1
         return plan
 
-    # -- scheduler ---------------------------------------------------------
+    # -- scheduler (pipeline stages 2+3) -----------------------------------
+    def _flush_tickets(self) -> None:
+        """Finalize outstanding builds' store insertions, FIFO.
+
+        Non-blocking: the deferred trees are lazy jax arrays and byte
+        accounting is shape metadata, so this never waits on the device —
+        it only makes the store state catch up to what the synchronous
+        loop would hold at the same point, releasing each build's pins.
+        """
+        while self._tickets:
+            self.builder.finalize_build(self._tickets.pop(0).pending)
+
+    def _join_ticket(self, s: Session) -> None:
+        """Join a ticketed session into the decode stage.
+
+        The compute-side barrier of the pipeline: the session's first
+        decode consumes the build's logits/caches, so wait for them here
+        (a no-op when the ready-poll triggered the join) and attribute the
+        wait to the build, not to the decode lanes.
+        """
+        t = s.ticket
+        t0 = time.perf_counter()
+        jax.block_until_ready(s.logits)
+        wait = time.perf_counter() - t0
+        t.join_wait_s = wait
+        t.joined = True
+        s.ticket = None
+        s.stats.prefill_s += wait
+        self.sched.tickets_joined += 1
+        self.sched.join_wait_s += wait
+
     def step(self) -> int:
-        """One scheduling round: sample a token for every ready session,
+        """One scheduling round: sample a token for every decodable session,
         then coalesce the still-running ones into batched decode calls.
-        Returns the number of tokens produced (0 = idle)."""
-        ready = [s for s in self.sessions.values() if s.busy]
-        if not ready:
+        Returns the number of tokens produced (0 = idle).
+
+        Sessions whose async build is still in flight are skipped — warm
+        sessions keep decoding at full batch while builds run — unless
+        nothing else can decode, in which case the oldest ticket is joined
+        (blocking) so the loop always makes progress.
+        """
+        self._flush_tickets()
+        busy = [s for s in self.sessions.values() if s.busy]
+        if not busy:
             return 0
+        ready = [s for s in busy if s.ticket is None]
+        waiting = sorted((s for s in busy if s.ticket is not None),
+                         key=lambda s: s.ticket.seq)
+        for s in waiting:
+            # join-before-first-decode: enter the decode lanes as soon as
+            # the build's result is ready (non-blocking poll); force-join
+            # the oldest ticket when the decode lanes would otherwise idle
+            if s.ticket.ready() or not ready:
+                self._join_ticket(s)
+                ready.append(s)
+        in_flight = sum(1 for s in busy if s.ticket is not None)
         for s in ready:
             self._sample(s)
         decode_set = [s for s in ready if s.remaining > 0]
@@ -281,6 +467,9 @@ class SessionManager:
         self.stats.decode_s += dt
         for s in decode_set:
             s.stats.decode_s += dt / len(decode_set)
+        if in_flight and decode_set:
+            self.sched.overlap_steps += 1
+            self.sched.overlap_rows += len(decode_set)
         return len(ready)
 
     def run(self) -> dict[int, list[int]]:
@@ -399,10 +588,23 @@ class SessionManager:
             s.mat_pending = True  # written back once the pack is flushed
 
     def _plan_groups(self, decode_set: list) -> list[tuple[int, ...]]:
-        """Partition ready sessions into batchable groups of ≤ max_batch."""
+        """Partition ready sessions into batchable groups of ≤ max_batch.
+
+        Sessions batch together only when they share a cache tree signature
+        *and* a bucketed KV capacity.  Capacity is part of the key because
+        a pack rides at its members' maximum: coalescing a 2048-token
+        session with 256-token ones would pad every short row to 2048 and
+        multiply the whole pack's attention cost — decode throughput for
+        warm sessions must hold steady when a long cold session joins
+        mid-stream, not degrade to the newcomer's sequence length.
+        Grouping never affects tokens (batched decode is bit-identical to
+        single-session decode regardless of pack membership).
+        """
         by_sig: dict[tuple, list] = {}
         for s in sorted(decode_set, key=lambda s: s.sid):
-            by_sig.setdefault(batch_signature(s.caches), []).append(s)
+            cap = bucket_len(max(s.capacity, cache_len(s.caches)),
+                             self.decode_bucket)
+            by_sig.setdefault((batch_signature(s.caches), cap), []).append(s)
         groups: list[tuple[int, ...]] = []
         for members in by_sig.values():
             for i in range(0, len(members), self.max_batch):
@@ -422,7 +624,9 @@ class SessionManager:
         sess = [self.sessions[sid] for sid in group]
         target = max(max(s.capacity, cache_len(s.caches)) for s in sess)
         cap = bucket_len(target, self.decode_bucket)
-        self._packs[group] = batch_caches([pad_cache_to(s.caches, cap) for s in sess])
+        self._packs[group] = batch_caches(
+            [pad_cache_to(s.caches, cap) for s in sess],
+            owned=self._donate_decode)
         self.sched.pack_rebuilds += 1
 
     def _flush_packs(self, groups: Optional[list] = None) -> None:
@@ -460,6 +664,36 @@ class SessionManager:
             _accumulate(agg, s.stats)
         agg.decode_s = self.stats.decode_s
         return agg
+
+    def report(self) -> dict:
+        """Flat serving report: every value is a finite number.
+
+        The divisions behind each rate are guarded (see ``ServeStats`` /
+        ``SchedulerStats`` properties), so an idle server — zero requests,
+        zero decode calls, no tickets — reports clean zeros rather than
+        NaN/inf; pinned by ``tests/test_multisession.py``.
+        """
+        agg = self.aggregate_stats()
+        sc = self.sched
+        return {
+            "requests": agg.requests,
+            "tokens_decoded": agg.tokens_decoded,
+            "tokens_reused": agg.tokens_reused,
+            "tokens_computed": agg.tokens_computed,
+            "reuse_frac": agg.reuse_frac,
+            "prefill_tok_s": agg.prefill_tok_s,
+            "decode_tok_s": agg.decode_tok_s,
+            "decode_calls": sc.decode_calls,
+            "mean_batch": sc.mean_batch,
+            "pack_rebuilds": sc.pack_rebuilds,
+            "decode_segments": sc.decode_segments,
+            "decode_rejects": sc.decode_rejects,
+            "tickets_launched": sc.tickets_launched,
+            "tickets_joined": sc.tickets_joined,
+            "mean_join_wait_s": sc.mean_join_wait_s,
+            "overlap_steps": sc.overlap_steps,
+            "overlap_batch": sc.overlap_batch,
+        }
 
 
 def _accumulate(into: ServeStats, src: ServeStats) -> None:

@@ -2,9 +2,14 @@
 
 Covers the three shared-store contracts (cross-session reuse over the same
 document, isolation across documents, global-budget eviction accounting),
-batched-decode parity with the single-session engine, and the
-put-during-execute pinning regressions for both stores.
+batched-decode parity with the single-session engine, the
+put-during-execute pinning regressions for both stores, and the pipeline
+determinism contracts (PR 5): async prefill must be a pure scheduling
+change — token streams, store contents, and snapshot manifests identical
+to the synchronous loop, including under eviction pressure.
 """
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -222,6 +227,213 @@ def test_submit_while_busy_raises(setup):
     mgr.run()
     mgr.submit(s1, 32, 1)  # fine after draining
     mgr.run()
+
+
+# ---------------------------------------------------------------------------
+# pipelined serving: async prefix builds overlapped with decode (PR 5)
+# ---------------------------------------------------------------------------
+
+def _store_fingerprint(store):
+    """Order-sensitive structural view of a store's contents."""
+    segs = [(sid, (seg.rng.lo, seg.rng.hi), seg.doc_id, seg.valid,
+             seg.capacity, seg.hits, tuple(sorted(seg.aliases)))
+            for sid, seg in store._segs.items()]
+    return segs, {d: tuple(v) for d, v in store._doc_stats.items()}, \
+        store.evictions, store._seq
+
+
+def _eviction_trace(model, params, async_prefill, hot_doc, cold_docs,
+                    budget):
+    """Hot tenant + one-off flood under a tight budget, mid-stream joins."""
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
+                         byte_budget=budget, async_prefill=async_prefill)
+    hot = mgr.add_session(hot_doc)
+    outs = []
+    mgr.submit(hot, len(hot_doc), 4, greedy=False, seed=0)
+    outs.append(mgr.run()[hot])
+    for r, cd in enumerate(cold_docs):
+        cold = mgr.add_session(cd)
+        # the hot tenant decodes while the cold build is in flight
+        mgr.submit(hot, len(hot_doc), 6, greedy=False, seed=10 + r)
+        mgr.step()
+        mgr.submit(cold, len(cd), 2, greedy=False, seed=20 + r)
+        out = mgr.run()
+        outs.append((out[hot], out[cold]))
+        mgr.close_session(cold)
+    return outs, mgr
+
+
+@pytest.fixture(scope="module")
+def eviction_traces(setup):
+    cfg, model, params, _, _ = setup
+    rng = np.random.default_rng(7)
+    hot_doc = rng.integers(0, cfg.vocab_size, 128).astype(np.int32)
+    cold_docs = [rng.integers(0, cfg.vocab_size, 128).astype(np.int32)
+                 for _ in range(3)]
+    probe = SessionManager(model, params, chunk_tokens=32, decode_bucket=32)
+    p = probe.add_session(hot_doc)
+    probe.submit(p, 128, 2)
+    probe.run()
+    budget = int(probe.store.nbytes() * 1.5)
+    sync = _eviction_trace(model, params, False, hot_doc, cold_docs, budget)
+    async_ = _eviction_trace(model, params, True, hot_doc, cold_docs, budget)
+    return sync, async_
+
+
+def test_async_prefill_token_streams_match_sync(eviction_traces):
+    (sync_out, _), (async_out, _) = eviction_traces
+    assert async_out == sync_out
+
+
+def test_async_prefill_store_matches_sync_under_eviction(eviction_traces):
+    """Deferred store insertions land in submit order, so segment ids,
+    admission decisions, and eviction victims replay the synchronous loop
+    exactly even under byte-budget pressure with decode write-back on."""
+    (_, sync_mgr), (_, async_mgr) = eviction_traces
+    assert async_mgr.store.evictions > 0          # the trace exerted pressure
+    assert _store_fingerprint(async_mgr.store) == \
+        _store_fingerprint(sync_mgr.store)
+    # cache payloads are bitwise identical, not just structurally
+    for sid, seg in async_mgr.store._segs.items():
+        ref = sync_mgr.store._segs[sid]
+        for a, b in zip(jax.tree.leaves(seg.caches),
+                        jax.tree.leaves(ref.caches)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_prefill_snapshot_manifest_matches_sync(eviction_traces,
+                                                      tmp_path):
+    import json
+
+    from repro.core.store import MANIFEST_NAME
+
+    (_, sync_mgr), (_, async_mgr) = eviction_traces
+    sync_mgr.store.save(tmp_path / "sync")
+    async_mgr.store.save(tmp_path / "async")
+
+    def records(d):
+        man = json.loads((tmp_path / d / MANIFEST_NAME).read_text())
+        # retention carries wall-clock stamps; everything else must match
+        return man["store"], [
+            {k: v for k, v in rec.items() if k != "retention"}
+            for rec in man["entries"]]
+
+    assert records("async") == records("sync")
+
+
+def test_ticket_pins_protect_unjoined_build(setup):
+    """Between an async submit and its finalize, the plan's reuse segments
+    are pinned by the ticket: a concurrent over-budget put cannot evict
+    what the in-flight build reads."""
+    cfg, model, params, doc_a, _ = setup
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
+                         async_prefill=True)
+    sid = mgr.add_session(doc_a)
+    mgr.submit(sid, 96, 2)
+    ref = mgr.run()[sid]
+
+    mgr.submit(sid, 96, 2, seed=1)          # async: ticket now in flight
+    t = mgr.sessions[sid].ticket
+    assert t is not None and not t.pending.finalized
+    pinned = set(t.pending.pin_token)
+    assert pinned and pinned <= set(mgr.store._pins)
+    # a hostile byte budget + junk put while the build is un-joined: every
+    # pinned segment must survive victim selection
+    mgr.store.byte_budget = 1
+    from repro.core.descriptors import Range
+    mgr.store.put(Range(0, 8), {"k": jnp.zeros((1, 1, 8, 2, 4))},
+                  doc_id="junk")
+    assert pinned <= set(mgr.store._segs)
+    mgr.store.byte_budget = None
+    out = mgr.run()[sid]
+    # pins released once the build finalized; tokens unaffected by the
+    # eviction storm (plan exactness: evicted ranges are re-prefilled)
+    assert mgr.store._pins == {}
+    mgr.submit(sid, 96, 2, seed=1)
+    assert mgr.run()[sid] == out == ref
+
+
+def test_failed_deferred_build_releases_pins(setup):
+    """A dispatch that raises mid-build must not leak the ticket's pins
+    (the sync path's context-manager guarantee, kept on the defer path)."""
+    cfg, model, params, doc_a, _ = setup
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
+                         async_prefill=True)
+    sid = mgr.add_session(doc_a)
+    mgr.submit(sid, 96, 2)
+    mgr.run()                                  # store now holds segments
+
+    def boom(*a, **k):
+        raise RuntimeError("dispatch failed")
+
+    orig = mgr.builder._jit_extend
+    mgr.builder._jit_extend = boom
+    try:
+        with pytest.raises(RuntimeError, match="dispatch failed"):
+            mgr.builder.prefix_with_logits(
+                doc_a, 96, doc_id=mgr.sessions[sid].doc_id, defer=True)
+    finally:
+        mgr.builder._jit_extend = orig
+    assert mgr.store._pins == {}
+    # the store still serves: same request succeeds afterwards
+    mgr.submit(sid, 96, 2)
+    assert len(mgr.run()[sid]) == 2
+
+
+def test_forced_join_makes_progress_when_only_cold(setup):
+    """A step with nothing decodable force-joins the oldest ticket instead
+    of spinning; a lone cold session drains normally."""
+    cfg, model, params, doc_a, _ = setup
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
+                         async_prefill=True)
+    sid = mgr.add_session(doc_a)
+    mgr.submit(sid, 64, 3)
+    assert mgr.sessions[sid].ticket is not None
+    assert mgr.step() == 1                  # forced join + first token
+    assert mgr.sessions[sid].ticket is None
+    assert mgr.sched.tickets_joined == 1
+    assert len(mgr.run()[sid]) == 3
+
+
+def test_capacity_keeps_warm_decode_groups_separate(setup):
+    """A long session joining mid-stream must not drag short sessions'
+    packs up to its capacity — groups split by bucketed KV capacity."""
+    cfg, model, params, doc_a, doc_b = setup
+    # sync mode so all three sessions are decodable on the first step
+    # (grouping is identical in both modes)
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
+                         max_batch=8, async_prefill=False)
+    s1 = mgr.add_session(doc_a)
+    s2 = mgr.add_session(doc_a)
+    long = mgr.add_session(doc_b)
+    mgr.submit(s1, 64, 4)
+    mgr.submit(s2, 64, 4)
+    mgr.submit(long, 160, 4)
+    mgr.step()
+    groups = list(mgr._packs)
+    assert (s1, s2) in groups and (long,) in groups
+    from repro.serve.kv_cache import cache_len
+    assert cache_len(mgr._packs[(s1, s2)]) < cache_len(mgr._packs[(long,)])
+    out = mgr.run()
+    assert len(out[s1]) == len(out[s2]) == len(out[long]) == 4
+
+
+def test_idle_server_report_is_finite(setup):
+    """Zero-traffic manager: every report value is a finite number (the
+    division guards behind mean_batch / reuse_frac / rates)."""
+    cfg, model, params, _, _ = setup
+    mgr = SessionManager(model, params)
+    rep = mgr.report()
+    assert rep["requests"] == 0 and rep["tokens_decoded"] == 0
+    for key, val in rep.items():
+        assert isinstance(val, (int, float)) and math.isfinite(val), \
+            (key, val)
+    assert mgr.sched.mean_batch == 0.0
+    assert mgr.sched.overlap_batch == 0.0
+    assert mgr.sched.mean_join_wait_s == 0.0
+    assert mgr.aggregate_stats().reuse_frac == 0.0
+    assert mgr.aggregate_stats().prefill_tok_s == 0.0
+    assert mgr.aggregate_stats().decode_tok_s == 0.0
 
 
 # ---------------------------------------------------------------------------

@@ -245,8 +245,11 @@ def test_crash_mid_snapshot_preserves_previous(tmp_path, monkeypatch,
     target = tmp_path / "st"
     store.save(target)
     manifest_before = (target / MANIFEST_NAME).read_text()
+    # dirty the store so the next (incremental) save serializes at least
+    # two fresh entries — unchanged ones are reused without touching savez
+    _add_two_more(store)
 
-    # crash while writing the second entry of the next snapshot
+    # crash while writing the second fresh entry of the next snapshot
     calls = {"n": 0}
     real_savez = np.savez
 
@@ -265,7 +268,7 @@ def test_crash_mid_snapshot_preserves_previous(tmp_path, monkeypatch,
     assert (target / MANIFEST_NAME).read_text() == manifest_before
     assert not list(tmp_path.glob(".st.tmp-*"))
     loaded = type(store).load(target)
-    assert len(loaded) == len(store)
+    assert len(loaded) == 2
 
 
 def _segment_store_with_two():
@@ -282,6 +285,17 @@ def _model_store_with_two():
     store.put("linreg", Range(0, 100), st)
     store.put("linreg", Range(100, 200), st)
     return store
+
+
+def _add_two_more(store):
+    if isinstance(store, SegmentStore):
+        store.put(Range(16, 24), _seg(8), doc_id="a")
+        store.put(Range(24, 32), _seg(8), doc_id="a")
+    else:
+        X, y = make_regression(200, d=4, seed=3)
+        st = LinRegStats.from_data(X, y)
+        store.put("linreg", Range(200, 300), st)
+        store.put("linreg", Range(300, 400), st)
 
 
 def test_interrupted_swap_recovers_previous_snapshot(tmp_path):
@@ -351,6 +365,112 @@ def test_manifest_is_json_with_schema(tmp_path):
     for rec in manifest["entries"]:
         assert {"file", "sha256", "retention", "tree",
                 "valid", "capacity"} <= set(rec)
+
+
+# ---------------------------------------------------------------------------
+# incremental snapshots: unchanged entries are not rewritten
+# ---------------------------------------------------------------------------
+
+def _entry_inodes(root):
+    manifest = json.loads((root / MANIFEST_NAME).read_text())
+    import os
+
+    return {rec.get("seg_id") or rec.get("model_id"):
+            os.stat(root / rec["file"]).st_ino
+            for rec in manifest["entries"]}
+
+
+def test_incremental_save_reuses_unchanged_entries(tmp_path):
+    """The second save serializes only new entries; unchanged ones are
+    hard-linked from the previous snapshot (same inode, no rewrite) and
+    the result still verifies checksums on load."""
+    store = SegmentStore(seq_bucket=8)
+    a = store.put(Range(0, 8), _seg(8, 1.0), doc_id="a")
+    b = store.put(Range(8, 16), _seg(8, 2.0), doc_id="a")
+    target = tmp_path / "st"
+    store.save(target)
+    assert store.last_save == {"written": 2, "reused": 0}
+    before = _entry_inodes(target)
+
+    c = store.put(Range(16, 24), _seg(8, 3.0), doc_id="a")
+    store.get(a)                      # retention churn must not dirty a/b
+    store.alias("a", "fork", upto=16)  # nor manifest-only alias changes
+    store.save(target)
+    assert store.last_save == {"written": 1, "reused": 2}
+    after = _entry_inodes(target)
+    assert after[a] == before[a] and after[b] == before[b]
+    assert c in after
+
+    loaded = SegmentStore.load(target)     # sha256 verified per entry
+    assert len(loaded) == 3
+    assert loaded._segs[a].hits == 1
+    assert loaded._segs[a].aliases == {"fork"}   # fresh manifest, reused file
+    np.testing.assert_array_equal(
+        np.asarray(loaded._segs[b].caches["k"]),
+        np.asarray(store._segs[b].caches["k"]))
+
+
+def test_load_then_save_writes_nothing(tmp_path):
+    """A reloaded store's first save is pure manifest work: every entry
+    file is reused from the snapshot it was loaded from."""
+    store = _segment_store_with_two()
+    target = tmp_path / "st"
+    store.save(target)
+    loaded = SegmentStore.load(target)
+    loaded.save(target)
+    assert loaded.last_save == {"written": 0, "reused": 2}
+    assert len(SegmentStore.load(target)) == 2
+
+
+def test_incremental_save_rewrites_replaced_model(tmp_path):
+    """Dropping and re-putting under the same id invalidates the cached
+    snapshot file — the replacement's bytes must reach disk."""
+    X, y = make_regression(200, d=4, seed=2)
+    st = LinRegStats.from_data(X, y)
+    store = ModelStore()
+    mid = store.put("linreg", Range(0, 100), st, model_id="m")
+    store.save(tmp_path / "ms")
+    X2, y2 = make_regression(200, d=4, seed=9)
+    st2 = LinRegStats.from_data(X2, y2)
+    store.drop(mid)
+    store.put("linreg", Range(0, 100), st2, model_id=mid)
+    store.save(tmp_path / "ms")
+    assert store.last_save == {"written": 1, "reused": 0}
+    loaded = ModelStore.load(tmp_path / "ms")
+    np.testing.assert_allclose(
+        np.asarray(loaded.get(mid).stats.A), np.asarray(st2.A))
+
+
+def test_incremental_save_tracks_docid_promotion(tmp_path):
+    """release_doc() can promote a segment onto a surviving alias after its
+    snapshot file froze; the reused file's manifest row must carry the
+    *current* doc_id, not the retired fork's."""
+    store = SegmentStore(seq_bucket=8)
+    a = store.put(Range(0, 8), _seg(8), doc_id="f1")
+    store.alias("f1", "f2", upto=8)
+    store.save(tmp_path / "st")
+    store.release_doc("f1")            # promotes seg.doc_id f1 -> f2
+    assert store._segs[a].doc_id == "f2"
+    store.save(tmp_path / "st")
+    assert store.last_save == {"written": 0, "reused": 1}
+    loaded = SegmentStore.load(tmp_path / "st")
+    assert loaded._segs[a].doc_id == "f2"
+    assert set(loaded.doc_ids()) == {"f2"}
+    assert a in loaded.index("f2")
+
+
+def test_incremental_save_survives_missing_previous_files(tmp_path):
+    """If the previous snapshot was deleted externally, save falls back to
+    full serialization instead of failing."""
+    store = _segment_store_with_two()
+    a_target = tmp_path / "st"
+    store.save(a_target)
+    import shutil
+
+    shutil.rmtree(a_target)
+    store.save(a_target)
+    assert store.last_save == {"written": 2, "reused": 0}
+    assert len(SegmentStore.load(a_target)) == 2
 
 
 # ---------------------------------------------------------------------------
