@@ -50,6 +50,7 @@ MODULES = [
     "benchmarks.bench_roofline",    # §Roofline reader (dry-run artifacts)
     "benchmarks.bench_serve_reuse", # serving prefix-reuse (beyond-paper)
     "benchmarks.bench_serve_overlap",  # async prefill vs sync-loop stall
+    "benchmarks.bench_serve_tiered",   # device/host/disk residency pressure
 ]
 
 

@@ -47,6 +47,14 @@ class CostModel:
     # lifecycle knobs (admission / eviction, not plan costing)
     expected_reuses: float = 1.0      # prior on future hits of a new entry
     admit_min_benefit_s: float = 0.0  # required net win before storing
+    # tier transfer rates (device HBM <-> host RAM <-> local disk) for the
+    # residency hierarchy: conservative PCIe/NVMe-class defaults.
+    # ``calibrate()`` deliberately leaves these alone — they price data
+    # *movement*, not the base-data scan it fits.
+    h2d_bytes_per_s: float = 8e9      # host -> device promote bandwidth
+    d2h_bytes_per_s: float = 8e9      # device -> host demote bandwidth
+    disk_bytes_per_s: float = 5e8     # spill-file read/write bandwidth
+    disk_fixed_s: float = 5e-4        # per-spill-file open/seek latency
 
     def fetch_points(self, n: int) -> float:
         if n <= 0:
@@ -124,6 +132,69 @@ class CostModel:
         """
         exp = self.expected_reuses if expected_reuses is None else expected_reuses
         return exp * self.reuse_benefit_s(n, nbytes) > self.admit_min_benefit_s
+
+    # -- residency tiers ---------------------------------------------------
+    def promote_s(self, nbytes: int, tier: str) -> float:
+        """Seconds to bring an entry resident on ``tier`` back to device.
+
+        ``host`` pays one h2d copy; ``disk`` additionally pays a spill-file
+        open plus the file read before the copy can start.
+        """
+        if tier == "device":
+            return 0.0
+        t = nbytes / self.h2d_bytes_per_s
+        if tier == "disk":
+            t += self.disk_fixed_s + nbytes / self.disk_bytes_per_s
+        return t
+
+    def demote_s(self, nbytes: int, tier: str, *, source: str = "device") -> float:
+        """Seconds to move an entry down to ``tier`` from ``source``.
+
+        ``drop`` is free *now* — its cost is the future recompute, which
+        :meth:`demotion_action` accounts separately.
+        """
+        if tier == "drop" or tier == source:
+            return 0.0
+        t = 0.0
+        if source == "device":
+            t += nbytes / self.d2h_bytes_per_s
+        if tier == "disk":
+            t += self.disk_fixed_s + nbytes / self.disk_bytes_per_s
+        return t
+
+    def demotion_cost_s(self, n: int, nbytes: int, tier: str, *,
+                        expected_reuses: Optional[float] = None,
+                        source: str = "device") -> float:
+        """Expected total seconds of relieving pressure via ``tier``: pay
+        the demotion now plus, per expected future hit, the promotion back
+        — or, for ``"drop"``, the full rebuild ``F(n)`` per hit.  This is
+        the same expected-future-seconds currency ``admit`` and the
+        eviction retention score already trade in.
+        """
+        exp = self.expected_reuses if expected_reuses is None else expected_reuses
+        if tier == "drop":
+            return exp * self.recompute_s(n)
+        return self.demote_s(nbytes, tier, source=source) + exp * self.promote_s(nbytes, tier)
+
+    def demotion_action(self, n: int, nbytes: int, *,
+                        tiers: tuple = ("host", "disk"),
+                        expected_reuses: Optional[float] = None,
+                        source: str = "device") -> str:
+        """Cheapest way to relieve byte pressure for one entry: one of the
+        available lower ``tiers``, or ``"drop"``.  Replaces binary evict:
+        entries whose rebuild is cheaper than a round-trip (tiny valid
+        extents, or ``expected_reuses`` ≈ 0 one-off documents) still get
+        dropped; everything else keeps its bytes on the cheapest shelf.
+        Ties prefer the higher (faster) tier.
+        """
+        best, best_cost = "drop", self.demotion_cost_s(
+            n, nbytes, "drop", expected_reuses=expected_reuses, source=source)
+        for tier in tiers:
+            c = self.demotion_cost_s(n, nbytes, tier,
+                                     expected_reuses=expected_reuses, source=source)
+            if c < best_cost:
+                best, best_cost = tier, c
+        return best
 
 
 def serve_cost_model(*, prefill_s_per_token: float = 1e-4,

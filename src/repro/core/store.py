@@ -11,13 +11,26 @@ one durable materialization layer: one manifest schema, one atomicity
 discipline (write to a temp directory, rename into place), and one
 retention-metadata round-trip (hits / last-touch, pins excluded) so the
 cost-model eviction policy resumes with honest scores after a restart.
+
+The base is also *tier-aware*: entries may be resident somewhere other
+than device memory (host RAM, spill files on disk), and the byte-pressure
+loop asks subclass hooks which entries count against the budget
+(``_pressure_nbytes``/``_evictable``) and how to relieve pressure by one
+entry (``_relegate`` — evict by default; the serving store demotes down
+the tier ladder when the cost model says the bytes are worth keeping).
+Serialization can run off-thread on a :class:`BackgroundWriter`
+(``save_async``), and long-lived snapshot directories can be rewritten by
+``compact_snapshot`` to break hard-link chains and drop stranded files.
 """
 from __future__ import annotations
 
+import copy
 import hashlib
 import json
 import os
+import queue
 import shutil
+import threading
 import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
@@ -32,6 +45,13 @@ from .suffstats import STATS_FAMILIES, Combinable
 
 #: eviction policies understood by :class:`PinnedStore`
 EVICTION_POLICIES = ("cost", "lru")
+
+#: residency ladder, fastest first
+RESIDENCY_TIERS = ("device", "host", "disk")
+
+#: tier policies understood by the serving store ("tiered" demotes down the
+#: ladder when the cost model prefers it; "evict" restores binary drop)
+TIER_POLICIES = ("tiered", "evict")
 
 #: manifest filename shared by every persistent store
 MANIFEST_NAME = "MANIFEST.json"
@@ -84,6 +104,88 @@ def unflatten_tree(spec, leaves, *, leaf_fn=None):
     return go(spec)
 
 
+def _link_or_copy(src: Path | str, dst: Path | str) -> None:
+    """Hard-link ``src`` to ``dst``, falling back to a metadata-preserving
+    copy on filesystems that refuse links (``EXDEV`` across devices,
+    ``EPERM`` on link-less mounts).  Raises ``OSError`` only when both
+    fail."""
+    try:
+        os.link(src, dst)
+    except OSError:
+        shutil.copy2(src, dst)
+
+
+class BackgroundWriter:
+    """Single-worker, bounded-queue executor for store I/O.
+
+    Keeps serialization, hashing, and file shuffling off the serving
+    thread: spill writes and snapshot saves enqueue a closure and return
+    immediately.  One worker means writes are totally ordered (a spill
+    enqueued before a snapshot lands first, so the snapshot can hard-link
+    it), and the bounded queue gives backpressure — :meth:`submit` returns
+    ``False`` instead of blocking when the queue is full, and callers
+    decide whether to drop the job (snapshots coalesce) or do the work
+    inline (spills must land).  The worker is a daemon thread, so a hung
+    filesystem can never wedge process exit.
+    """
+
+    def __init__(self, maxsize: int = 8) -> None:
+        self._q: queue.Queue = queue.Queue(maxsize)
+        self._thread: Optional[threading.Thread] = None
+        self.jobs_done = 0
+        self.jobs_failed = 0
+
+    def submit(self, fn) -> bool:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._run, name="store-writer", daemon=True)
+            self._thread.start()
+        try:
+            self._q.put_nowait(fn)
+        except queue.Full:
+            return False
+        return True
+
+    def depth(self) -> int:
+        """Jobs queued or running (0 when idle)."""
+        return int(self._q.unfinished_tasks)
+
+    def drain(self) -> None:
+        """Block until every submitted job has finished."""
+        self._q.join()
+
+    def _run(self) -> None:
+        while True:
+            fn = self._q.get()
+            try:
+                fn()
+            except BaseException:
+                self.jobs_failed += 1
+            else:
+                self.jobs_done += 1
+            finally:
+                self._q.task_done()
+
+
+@dataclass
+class _SaveItem:
+    """One entry of a snapshot, frozen on the serving thread.
+
+    ``entry`` is a shallow copy — it pins the payload reference current at
+    capture time, so the background worker serializes a consistent view
+    even if the live entry is demoted, promoted, or dropped mid-write.
+    ``source`` is a ``(path, record)`` pair when the entry's npz bytes
+    already exist on disk (previous snapshot or spill file) and can be
+    hard-linked instead of re-serialized.
+    """
+
+    key: str
+    entry: Any
+    source: Optional[tuple[Path, dict]]
+    manifest: dict
+    retention: dict
+
+
 @dataclass
 class StoredModel:
     model_id: str
@@ -133,7 +235,8 @@ class PinnedStore:
 
     def __init__(self, *, cost_model: Optional[CostModel] = None,
                  policy: Optional[str] = None,
-                 decay_half_life_s: float = 300.0) -> None:
+                 decay_half_life_s: float = 300.0,
+                 writer: Optional[BackgroundWriter] = None) -> None:
         self._pins: dict[str, int] = {}
         self.cost = cost_model if cost_model is not None else CostModel()
         if policy is None:
@@ -153,6 +256,32 @@ class PinnedStore:
         self._snapshot_dir: Optional[Path] = None
         #: {"written": n, "reused": m} for the most recent save()
         self.last_save: dict[str, int] = {}
+        # background-save state.  _records_dirty guards the one race an
+        # off-thread save opens: a put() that replaces an entry after the
+        # save captured must not have its stale record re-installed when
+        # the write lands.
+        self._writer = writer
+        self._records_lock = threading.Lock()
+        self._records_dirty: set[str] = set()
+        self._save_pending = False
+        self._load_src: Optional[Path] = None
+        self.bg_saves = 0
+        self.bg_save_drops = 0
+        self.save_errors: list[BaseException] = []
+        #: seconds the calling thread spent blocked waiting on the writer
+        self.save_stall_s = 0.0
+        #: entry files ignored+removed by load() (stranded by a crashed
+        #: compaction or an interrupted foreign save)
+        self.swept_stranded = 0
+
+    @property
+    def writer(self) -> Optional[BackgroundWriter]:
+        return self._writer
+
+    def _ensure_writer(self) -> BackgroundWriter:
+        if self._writer is None:
+            self._writer = BackgroundWriter()
+        return self._writer
 
     def pin(self, ids: Iterable[str]) -> tuple:
         """Acquire reentrant pins on ``ids``; returns the token for
@@ -238,16 +367,49 @@ class PinnedStore:
         return min(candidates,
                    key=lambda e: (self.retention_score(e, now), e.last_used_s))
 
+    # -- residency hooks ----------------------------------------------------
+    # The pressure loop is tier-aware: subclasses decide which bytes count
+    # against the budget, which entries are fair game, and how to relieve
+    # pressure by one entry.  The base defaults reproduce plain
+    # evict-under-budget exactly.
+
+    def _pressure_nbytes(self) -> int:
+        """Bytes counted against ``byte_budget``.  The base counts every
+        entry; the serving store counts only the device tier (host and
+        disk residents are precisely the bytes the budget pushed out)."""
+        return self.nbytes()
+
+    def _evictable(self, entry) -> bool:
+        """Whether ``entry`` may be selected by the pressure loop (pins are
+        checked separately).  The serving store limits victims to the
+        device tier; lower tiers answer to ``_enforce_tiers``."""
+        return True
+
+    def _relegate(self, victim) -> bool:
+        """Relieve byte pressure by one entry; return ``False`` to stop the
+        loop (nothing left that is safe to reclaim).  The base evicts; the
+        serving store may instead demote the victim down the residency
+        ladder when the cost model prices the round-trip below a rebuild."""
+        if len(self._entries()) <= 1:
+            return False
+        self._evict(victim)
+        self.evictions += 1
+        return True
+
+    def _enforce_tiers(self) -> None:
+        """Enforce lower-tier capacity limits after the device-pressure
+        loop (e.g. a host-RAM budget cascading into disk spill)."""
+
     def _maybe_evict(self) -> None:
-        if self.byte_budget is None:
-            return
-        while self.nbytes() > self.byte_budget and len(self._entries()) > 1:
-            candidates = [e for k, e in self._entries().items()
-                          if k not in self._pins]
-            if not candidates:
-                return  # everything resident is pinned by in-flight plans
-            self._evict(self._pick_victim(candidates))
-            self.evictions += 1
+        if self.byte_budget is not None:
+            while self._pressure_nbytes() > self.byte_budget:
+                candidates = [e for k, e in self._entries().items()
+                              if k not in self._pins and self._evictable(e)]
+                if not candidates:
+                    break  # everything under pressure is pinned
+                if not self._relegate(self._pick_victim(candidates)):
+                    break
+        self._enforce_tiers()
 
     # -- persistence (shared npz + manifest machinery) ----------------------
     # Subclasses implement the two entry hooks; the base owns the manifest
@@ -286,51 +448,60 @@ class PinnedStore:
         snapshotted under a looser budget sheds down to the current one)."""
         self._maybe_evict()
 
-    def _reuse_entry_file(self, key: str, fpath: Path) -> Optional[dict]:
-        """Try to satisfy one entry of a new snapshot from the previous one.
+    def _invalidate_record(self, key: str) -> None:
+        """Drop the cached snapshot record for ``key`` (its payload was
+        replaced).  Also marks the key dirty so an in-flight background
+        save cannot re-install a stale record over the invalidation."""
+        with self._records_lock:
+            self._entry_records.pop(key, None)
+            self._records_dirty.add(key)
+
+    def _entry_file_source(self, key: str, entry) -> Optional[tuple[Path, dict]]:
+        """``(path, record)`` for an entry whose exact npz bytes already
+        exist on disk, or ``None`` if it must be serialized from scratch.
 
         Entry payloads are immutable once stored, so if ``key`` was part of
-        the last snapshot this store wrote (or loaded), its npz file can be
-        hard-linked into the new snapshot directory as-is — no device sync
-        to fetch the arrays, no serialization, no re-hash.  Returns a copy
-        of the cached manifest record on success, ``None`` when the entry
-        must be serialized from scratch (never snapshotted, previous file
-        missing, or the filesystem refuses links *and* copies).
+        the last snapshot this store wrote (or loaded), its file can be
+        hard-linked into the new snapshot as-is — no device sync to fetch
+        the arrays, no serialization, no re-hash.  The serving store also
+        answers with disk-tier spill files here, making snapshots of
+        spilled segments link-cheap too.
         """
-        cached = self._entry_records.get(key)
+        with self._records_lock:
+            cached = self._entry_records.get(key)
         if cached is None or self._snapshot_dir is None:
             return None
-        src = self._snapshot_dir / cached["file"]
-        try:
-            os.link(src, fpath)
-        except OSError:
-            try:
-                shutil.copyfile(src, fpath)
-            except OSError:
-                return None
-        return dict(cached)
+        return self._snapshot_dir / cached["file"], dict(cached)
 
-    def save(self, path: str | Path) -> None:
-        """Snapshot the store to ``path`` atomically and incrementally.
+    def _capture_save(self) -> tuple[list[_SaveItem], dict]:
+        """Freeze everything a snapshot needs, on the calling thread.
 
-        Everything — per-entry ``entry_*.npz`` files and ``MANIFEST.json``
-        — is written to a temporary sibling directory and renamed into
-        place, so a crash mid-snapshot can never leave a half-written
-        store behind: ``path`` either holds the previous complete snapshot
-        or the new one.  Retention metadata (hits, created/last-used
-        stamps) rides in the manifest; pins are runtime state and are
-        deliberately not persisted.
-
-        Saves are incremental over the previous snapshot: entries already
-        present there are hard-linked (payloads are frozen at put time, so
-        the bytes cannot have changed) and only entries stored since are
-        serialized, which makes frequent snapshotting (``--snapshot-every
-        1``) cost O(new entries) instead of O(store).  The manifest itself
-        is always rewritten — mutable per-entry fields
-        (:meth:`_entry_manifest`) and retention metadata stay fresh.
-        ``last_save`` records the ``{"written", "reused"}`` split.
+        Cheap: shallow entry copies plus manifest/retention dicts — no
+        array serialization, no hashing, no device sync.  After capture
+        the snapshot content is fixed, so the write can proceed on a
+        worker while the serving thread keeps mutating the live store.
         """
-        root = Path(path)
+        items = [
+            _SaveItem(
+                key=key,
+                entry=copy.copy(entry),
+                source=self._entry_file_source(key, entry),
+                manifest=self._entry_manifest(entry),
+                retention={
+                    "hits": entry.hits,
+                    "created_s": entry.created_s,
+                    "last_used_s": entry.last_used_s,
+                },
+            )
+            for key, entry in self._entries().items()
+        ]
+        return items, self._store_meta()
+
+    def _write_snapshot(self, root: Path, items: list[_SaveItem],
+                        store_meta: dict) -> None:
+        """Serialize captured items to ``root`` (temp dir + rename; see
+        :meth:`save`).  Runs on the caller for sync saves and on the
+        background writer for :meth:`save_async`."""
         root.parent.mkdir(parents=True, exist_ok=True)
         tmp = root.parent / f".{root.name}.tmp-{os.getpid()}"
         if tmp.exists():
@@ -342,29 +513,31 @@ class PinnedStore:
             manifest: dict[str, Any] = {
                 "version": MANIFEST_VERSION,
                 "kind": type(self).__name__,
-                "store": self._store_meta(),
+                "store": store_meta,
                 "entries": [],
             }
-            for i, (key, entry) in enumerate(self._entries().items()):
+            for i, item in enumerate(items):
                 fname = f"entry_{i:06d}.npz"
                 fpath = tmp / fname
-                record = self._reuse_entry_file(key, fpath)
+                record = None
+                if item.source is not None:
+                    src, cached = item.source
+                    try:
+                        _link_or_copy(src, fpath)
+                        record = cached
+                        reused += 1
+                    except OSError:
+                        record = None  # source vanished: serialize fresh
                 if record is None:
-                    arrays, record = self._serialize_entry(entry)
+                    arrays, record = self._serialize_entry(item.entry)
                     np.savez(fpath, **arrays)
                     record["sha256"] = hashlib.sha256(
                         fpath.read_bytes()).hexdigest()
                     written += 1
-                else:
-                    reused += 1
                 record["file"] = fname
-                new_records[key] = dict(record)
-                record.update(self._entry_manifest(entry))
-                record["retention"] = {
-                    "hits": entry.hits,
-                    "created_s": entry.created_s,
-                    "last_used_s": entry.last_used_s,
-                }
+                new_records[item.key] = dict(record)
+                record.update(item.manifest)
+                record["retention"] = item.retention
                 manifest["entries"].append(record)
             (tmp / MANIFEST_NAME).write_text(json.dumps(manifest, indent=1))
         except BaseException:
@@ -386,10 +559,130 @@ class PinnedStore:
             for stale in root.parent.glob(pattern):
                 shutil.rmtree(stale, ignore_errors=True)
         # reused files were hard-linked, so sweeping the old snapshot dir
-        # above cannot invalidate them — the inodes live on under `root`
-        self._entry_records = new_records
+        # above cannot invalidate them — the inodes live on under `root`.
+        # Entries replaced while this save was in flight must not get
+        # their stale records installed.
+        with self._records_lock:
+            for k in self._records_dirty:
+                new_records.pop(k, None)
+            self._entry_records = new_records
         self._snapshot_dir = root
         self.last_save = {"written": written, "reused": reused}
+
+    def save(self, path: str | Path) -> None:
+        """Snapshot the store to ``path`` atomically and incrementally.
+
+        Everything — per-entry ``entry_*.npz`` files and ``MANIFEST.json``
+        — is written to a temporary sibling directory and renamed into
+        place, so a crash mid-snapshot can never leave a half-written
+        store behind: ``path`` either holds the previous complete snapshot
+        or the new one.  Retention metadata (hits, created/last-used
+        stamps) rides in the manifest; pins are runtime state and are
+        deliberately not persisted.
+
+        Saves are incremental over the previous snapshot: entries already
+        present there are hard-linked (payloads are frozen at put time, so
+        the bytes cannot have changed; filesystems without link support
+        fall back to a copy) and only entries stored since are serialized,
+        which makes frequent snapshotting (``--snapshot-every 1``) cost
+        O(new entries) instead of O(store).  The manifest itself is always
+        rewritten — mutable per-entry fields (:meth:`_entry_manifest`) and
+        retention metadata stay fresh.  ``last_save`` records the
+        ``{"written", "reused"}`` split.
+
+        This is the synchronous form: any queued background saves are
+        drained first, then the write runs on the calling thread.  See
+        :meth:`save_async` for the non-blocking form.
+        """
+        self.flush_saves()
+        with self._records_lock:
+            self._records_dirty.clear()
+        items, meta = self._capture_save()
+        self._write_snapshot(Path(path), items, meta)
+
+    def save_async(self, path: str | Path) -> bool:
+        """Queue a snapshot of the store's *current* state on the
+        background writer and return immediately.
+
+        The snapshot content is captured on the calling thread (shallow
+        entry copies — no serialization, no device sync), so later
+        mutations don't bleed into it; the worker then runs the same
+        atomic temp-dir+rename protocol as :meth:`save`, so a crash
+        mid-write leaves the previous snapshot intact and the existing
+        recovery paths apply unchanged.  At most one save is in flight per
+        store: requests made while one is pending coalesce into nothing
+        (counted in ``bg_save_drops`` — the next request snapshots
+        everything anyway).  Returns ``True`` if the save was queued.
+        Worker-side failures land in ``save_errors`` and never disturb the
+        serving thread.
+        """
+        root = Path(path)
+        with self._records_lock:
+            if self._save_pending:
+                self.bg_save_drops += 1
+                return False
+            self._save_pending = True
+            self._records_dirty.clear()
+        items, meta = self._capture_save()
+
+        def _job() -> None:
+            try:
+                self._write_snapshot(root, items, meta)
+                self.bg_saves += 1
+            except BaseException as exc:
+                self.save_errors.append(exc)
+            finally:
+                with self._records_lock:
+                    self._save_pending = False
+
+        if not self._ensure_writer().submit(_job):
+            with self._records_lock:
+                self._save_pending = False
+            self.bg_save_drops += 1
+            return False
+        return True
+
+    def flush_saves(self) -> float:
+        """Block until every queued background write has landed; returns
+        the seconds stalled (also accumulated in ``save_stall_s`` so the
+        serving report can prove steady-state decode never waits here)."""
+        if self._writer is None:
+            return 0.0
+        t0 = time.perf_counter()
+        self._writer.drain()
+        dt = time.perf_counter() - t0
+        self.save_stall_s += dt
+        return dt
+
+    def compact_snapshot(self) -> Optional[dict]:
+        """Rewrite this store's snapshot directory in place.
+
+        Long-lived snapshot dirs accumulate cruft: hard-link chains shared
+        with older generations and spill files (which keep dead inodes
+        alive), and entry files stranded by crashed saves or compactions.
+        Compaction rewrites the directory atomically (same temp-dir+rename
+        protocol as :meth:`save`): manifest-listed entries are *copied* —
+        never linked — into a compactly renumbered layout, so the rewritten
+        snapshot holds the only reference to its bytes, and everything the
+        manifest doesn't list is dropped.  Returns ``{"kept", "dropped"}``
+        or ``None`` if the store has never been snapshotted.
+        """
+        if self._snapshot_dir is None:
+            return None
+        self.flush_saves()
+        root = self._snapshot_dir
+        stats = compact_snapshot_dir(root)
+        # remap the incremental-save cache onto the renumbered files
+        manifest = json.loads((root / MANIFEST_NAME).read_text())
+        with self._records_lock:
+            keep: dict[str, dict] = {}
+            for rec in manifest["entries"]:
+                key = rec.get("seg_id") or rec.get("model_id")
+                if key in self._entry_records and key not in self._records_dirty:
+                    keep[key] = {k: v for k, v in rec.items()
+                                 if k != "retention"}
+            self._entry_records = keep
+        return stats
 
     @staticmethod
     def _recover_interrupted_swap(root: Path) -> None:
@@ -420,6 +713,12 @@ class PinnedStore:
         corrupt or tampered snapshot raises instead of serving garbage.
         Retention metadata is restored per entry after insertion, so
         eviction resumes from honest hit counts and idle times.
+
+        Entry files the manifest does not reference (stranded by a crashed
+        compaction, or a foreign save interrupted after writing files but
+        before its manifest) are ignored and swept — the manifest is the
+        sole source of truth for what a snapshot contains.  The count
+        lands in ``swept_stranded``.
         """
         root = Path(path)
         cls._recover_interrupted_swap(root)
@@ -431,6 +730,11 @@ class PinnedStore:
                 f"(expected {MANIFEST_VERSION}); re-save the store with the "
                 f"current code")
         store = cls(**ctor_kwargs)
+        known = {rec["file"] for rec in manifest["entries"]}
+        for stray in sorted(root.glob("entry_*.npz")):
+            if stray.name not in known:
+                stray.unlink()
+                store.swept_stranded += 1
         meta = manifest.get("store", {})
         store._apply_store_meta(meta)
         for rec in manifest["entries"]:
@@ -440,6 +744,7 @@ class PinnedStore:
                 if digest != rec["sha256"]:
                     raise IOError(f"checksum mismatch for {rec['file']}")
             arrays = np.load(fpath)
+            store._load_src = fpath  # for hooks that park entries lazily
             key = store._deserialize_entry(rec, arrays)
             # a tighter budget than the snapshot's may evict entries while
             # they load; restore retention only for what stayed resident
@@ -458,12 +763,60 @@ class PinnedStore:
             store._entry_records[key] = {
                 k: v for k, v in rec.items() if k != "retention"}
         store._finish_load(meta)
+        store._load_src = None
         store._snapshot_dir = root
         return store
 
 
 #: historical name (the policy was global LRU through PR 2)
 PinnedLRU = PinnedStore
+
+
+def compact_snapshot_dir(path: str | Path) -> dict:
+    """Atomically rewrite a snapshot directory to its minimal form.
+
+    Keeps exactly the entry files the manifest references, renumbered
+    compactly, each written as a private copy (``st_nlink == 1``) so
+    hard-link chains to older snapshot generations and spill files are
+    broken and deleting those actually frees bytes.  Files the manifest
+    does not list — stranded by crashed saves or earlier compactions — are
+    dropped, along with stale ``.old-*``/``.tmp-*`` siblings.  Safe on a
+    snapshot mid-interrupted-swap (heals it first).  Returns
+    ``{"kept": n, "dropped": m}``.
+    """
+    root = Path(path)
+    PinnedStore._recover_interrupted_swap(root)
+    manifest = json.loads((root / MANIFEST_NAME).read_text())
+    tmp = root.parent / f".{root.name}.tmp-{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    kept = 0
+    known: set[str] = set()
+    try:
+        for i, rec in enumerate(manifest["entries"]):
+            src = root / rec["file"]
+            known.add(rec["file"])
+            fname = f"entry_{i:06d}.npz"
+            # a full copy, never a link: compaction's whole point is that
+            # the rewritten snapshot owns its bytes outright
+            shutil.copy2(src, tmp / fname)
+            rec["file"] = fname
+            kept += 1
+        (tmp / MANIFEST_NAME).write_text(json.dumps(manifest, indent=1))
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    dropped = sum(1 for f in root.glob("entry_*.npz") if f.name not in known)
+    old = root.parent / f".{root.name}.old-{os.getpid()}"
+    if old.exists():
+        shutil.rmtree(old)
+    os.rename(root, old)
+    os.rename(tmp, root)
+    for pattern in (f".{root.name}.old-*", f".{root.name}.tmp-*"):
+        for stale in root.parent.glob(pattern):
+            shutil.rmtree(stale, ignore_errors=True)
+    return {"kept": kept, "dropped": dropped}
 
 
 class ModelStore(PinnedStore):
@@ -488,7 +841,7 @@ class ModelStore(PinnedStore):
             self._seq += 1
             model_id = f"{family}:{rng.lo}-{rng.hi}#{self._seq}"
         # replacing an id invalidates any snapshot file cached under it
-        self._entry_records.pop(model_id, None)
+        self._invalidate_record(model_id)
         sm = StoredModel(model_id=model_id, family=family, rng=rng,
                          stats=stats.to_numpy(), meta=meta or {})
         self._models[model_id] = sm

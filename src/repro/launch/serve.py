@@ -20,6 +20,18 @@ mid-snapshot leaves the previous complete snapshot in place:
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-67b --reduced \
       --doc-len 1024 --sessions 4 --requests 2 --store-dir /tmp/kvstore \
       --snapshot-every 1
+
+Tiered residency: ``--host-budget`` / ``--spill-dir`` open host-RAM and
+disk tiers below the device budget, so segments squeezed out by
+``--byte-budget`` demote (cost-priced) instead of being rebuilt from
+scratch; ``--tier-policy evict`` restores the old drop-only behavior.
+Periodic snapshots run on a background writer by default
+(``--sync-saves`` to disable); ``--compact-final`` rewrites the snapshot
+directory compactly on exit:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-67b --reduced \
+      --doc-len 1024 --sessions 4 --requests 2 --byte-budget 50000000 \
+      --host-budget 500000000 --spill-dir /tmp/kvspill --store-dir /tmp/kvstore
 """
 from __future__ import annotations
 
@@ -30,7 +42,20 @@ import jax
 import numpy as np
 
 
-def _load_store(args, budget):
+def _tier_kwargs(args) -> dict:
+    """Residency-tier configuration from the command line (empty = legacy
+    single-tier store, byte-for-byte the pre-tier behavior)."""
+    kw = {}
+    if args.host_budget > 0:
+        kw["host_budget"] = args.host_budget
+    if args.spill_dir:
+        kw["spill_dir"] = args.spill_dir
+    if args.tier_policy:
+        kw["tier_policy"] = args.tier_policy
+    return kw
+
+
+def _load_store(args, budget, tiers):
     """Reload the segment store from ``--store-dir`` if a snapshot exists.
 
     Documents are content-keyed everywhere (including single-session mode,
@@ -45,7 +70,7 @@ def _load_store(args, budget):
 
     try:
         store = SegmentStore.load(args.store_dir, byte_budget=budget,
-                                  policy=args.eviction_policy)
+                                  policy=args.eviction_policy, **tiers)
     except FileNotFoundError:
         return None       # no snapshot yet: first run populates it
     print(f"warm start: reloaded {len(store)} segments "
@@ -54,13 +79,67 @@ def _load_store(args, budget):
     return store
 
 
+def _make_store(args, budget, seq_bucket):
+    """Load-or-create the store when launch-level config demands it.
+
+    Returns ``None`` on the legacy path (no snapshot, no tier flags) so
+    the engine/manager construct their own store exactly as before; the
+    tier flags force construction here because they are store-creation
+    parameters, same contract as ``byte_budget``.
+    """
+    tiers = _tier_kwargs(args)
+    store = _load_store(args, budget, tiers)
+    if store is not None or not tiers:
+        return store
+    from repro.core.cost import serve_cost_model
+    from repro.serve.kv_cache import SegmentStore
+
+    return SegmentStore(byte_budget=budget, cost_model=serve_cost_model(),
+                        policy=args.eviction_policy, seq_bucket=seq_bucket,
+                        **tiers)
+
+
 def _snapshot(store, args, *, final: bool = False) -> None:
     if not args.store_dir:
         return
+    if not final:
+        # periodic snapshots ride the background writer (coalesced if one
+        # is already in flight) so the serving loop never blocks on I/O
+        if args.background_saves:
+            store.save_async(args.store_dir)
+        else:
+            store.save(args.store_dir)
+        return
+    # the final snapshot is synchronous — restart-equals-warm requires the
+    # complete store on disk before exit (save() drains queued writes first)
     store.save(args.store_dir)
-    if final:
-        print(f"snapshot: {len(store)} segments ({store.nbytes()/1e6:.1f} MB) "
-              f"-> {args.store_dir}")
+    if args.compact_final:
+        res = store.compact_snapshot()
+        if res is not None:
+            print(f"compacted snapshot: kept {res['kept']}, "
+                  f"dropped {res['dropped']}")
+    print(f"snapshot: {len(store)} segments ({store.nbytes()/1e6:.1f} MB) "
+          f"-> {args.store_dir}")
+
+
+def _print_tier_report(store, args) -> None:
+    tiers = store.tier_bytes()
+    print(f"  tiers ({store.tier_policy} policy): "
+          f"device {tiers['device']/1e6:.1f} MB, "
+          f"host {tiers['host']/1e6:.1f} MB, "
+          f"disk {tiers['disk']/1e6:.1f} MB")
+    print(f"  tier traffic: promotions {sum(store.promotions.values())} "
+          f"(host {store.promotions['host']}, disk {store.promotions['disk']}), "
+          f"demotions {sum(store.demotions.values())} "
+          f"(host {store.demotions['host']}, disk {store.demotions['disk']}), "
+          f"prefetches {store.prefetches}, spill writes {store.spill_writes}")
+    if args.store_dir:
+        w = store.writer
+        print(f"  background saves: {store.bg_saves} completed, "
+              f"{store.bg_save_drops} coalesced, "
+              f"queue {w.depth() if w is not None else 0}, "
+              f"stall {store.save_stall_s*1e3:.1f} ms, "
+              f"errors {len(store.save_errors)}")
 
 
 def _extras(cfg):
@@ -81,7 +160,7 @@ def run_single(args, cfg, model, params, rng) -> None:
 
     doc = rng.integers(0, cfg.vocab_size, args.doc_len).astype(np.int32)
     budget = args.byte_budget if args.byte_budget > 0 else None
-    store = _load_store(args, budget)
+    store = _make_store(args, budget, 64)   # ServeEngine's seq_bucket default
     store_kw = (dict(store=store) if store is not None
                 else dict(byte_budget=budget,
                           eviction_policy=args.eviction_policy))
@@ -108,6 +187,7 @@ def run_single(args, cfg, model, params, rng) -> None:
           f"planner {s.planner_s*1e3:.1f} ms total, prefill {s.prefill_s:.2f}s, "
           f"decode {s.decode_s:.2f}s, store {len(eng.store)} segments "
           f"({eng.store.nbytes()/1e6:.1f} MB)")
+    _print_tier_report(eng.store, args)
 
 
 def run_multi(args, cfg, model, params, rng) -> None:
@@ -118,7 +198,7 @@ def run_multi(args, cfg, model, params, rng) -> None:
     unique_docs = [rng.integers(0, cfg.vocab_size, args.doc_len).astype(np.int32)
                    for _ in range(args.sessions - n_shared)]
     budget = args.byte_budget if args.byte_budget > 0 else None
-    store = _load_store(args, budget)
+    store = _make_store(args, budget, args.chunk_tokens)  # = decode_bucket
     store_kw = (dict(store=store) if store is not None
                 else dict(byte_budget=budget,
                           eviction_policy=args.eviction_policy))
@@ -172,6 +252,7 @@ def run_multi(args, cfg, model, params, rng) -> None:
           f"(mean join wait {rep['mean_join_wait_s']*1e3:.1f} ms), "
           f"{rep['overlap_steps']} decode rounds overlapped builds "
           f"(mean batch {rep['overlap_batch']:.2f})")
+    _print_tier_report(st, args)
     if args.store_dir and st.last_save:
         print(f"  snapshot: {st.last_save['written']} entries written, "
               f"{st.last_save['reused']} reused from the previous snapshot")
@@ -220,6 +301,33 @@ def main() -> None:
     ap.add_argument("--snapshot-every", type=int, default=0,
                     help="with --store-dir: re-snapshot the store every N "
                          "request rounds (0 = only on exit)")
+    ap.add_argument("--host-budget", type=int, default=0,
+                    help="host-RAM tier capacity in bytes (0 = tier "
+                         "disabled): segments squeezed out of the device "
+                         "budget demote here when the cost model prices the "
+                         "round-trip below a rebuild")
+    ap.add_argument("--spill-dir", default="",
+                    help="directory for the disk tier's spill files (empty "
+                         "= tier disabled); overflow from the host tier "
+                         "spills here via the background writer")
+    ap.add_argument("--tier-policy", choices=["tiered", "evict"], default=None,
+                    help="under byte pressure: cost-priced demotion through "
+                         "the residency tiers (default) or legacy "
+                         "evict-only drops (default honors "
+                         "REPRO_TIER_POLICY)")
+    ap.add_argument("--background-saves", dest="background_saves",
+                    action="store_true", default=True,
+                    help="run --snapshot-every saves on the background "
+                         "writer (default): serialization never blocks a "
+                         "decode step, and overlapping requests coalesce")
+    ap.add_argument("--sync-saves", dest="background_saves",
+                    action="store_false",
+                    help="write every periodic snapshot on the serving "
+                         "thread (the final snapshot is always synchronous)")
+    ap.add_argument("--compact-final", action="store_true",
+                    help="after the final snapshot: rewrite the snapshot "
+                         "dir compactly (drops stranded files and "
+                         "hard-link chains from older generations)")
     args = ap.parse_args()
 
     from repro.configs import get_config, reduced

@@ -241,6 +241,11 @@ class PrefixCacheBuilder:
         t0 = time.perf_counter()
         try:
             with ctx:
+                # start every reuse segment's tier promotion up front —
+                # under the plan's pins, so promoted entries cannot be
+                # reclaimed before their insert — letting disk reads and
+                # h2d copies overlap the gap prefills below
+                self.store.prefetch_ids(plan.models_used)
                 for st in steps:
                     if st.model_id is not None:
                         seg = self.store.get(st.model_id, requester=requester)

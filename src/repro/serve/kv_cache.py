@@ -43,13 +43,27 @@ manifest layer in :class:`repro.core.store.PinnedStore` — content-keyed
 ``doc_id``s make the manifest natural — so a restarted server reloads its
 warm segments, retention metadata (hits, last-touch; pins excluded), and
 the observed per-document reuse rates that drive admission priors.
+
+Residency tiers (PR 6): a resident segment lives on one rung of the
+device → host → disk ladder.  Under device byte pressure the cost model
+prices the three reliefs against each other — demote to host RAM (NumPy
+mirror), spill to disk (same npz format as snapshot entries), or drop and
+re-prefill later — and the cheapest expected-future-seconds action wins
+(:meth:`repro.core.cost.CostModel.demotion_action`).  Hits on a demoted
+segment transparently promote it back to device (an h2d dispatch, cheap
+and async) before the planner's jitted insert consumes it, and
+``prefetch``/``prefetch_ids`` start those promotions ahead of use.  Spill
+writes and snapshots run on the shared :class:`repro.core.store.
+BackgroundWriter` so the serving thread never serializes arrays.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import time
 from dataclasses import dataclass, field
 from functools import cached_property
+from pathlib import Path
 from typing import Any, Optional
 
 import jax
@@ -58,7 +72,8 @@ import numpy as np
 
 from repro.core.cost import CostModel, serve_cost_model
 from repro.core.descriptors import DescriptorIndex, Range
-from repro.core.store import PinnedStore, flatten_tree, unflatten_tree
+from repro.core.store import (TIER_POLICIES, BackgroundWriter, PinnedStore,
+                              _link_or_copy, flatten_tree, unflatten_tree)
 # the model layer owns the cache-leaf taxonomy (it creates the entries);
 # re-exported here under the serve layer's historical names.  In *stored*
 # segment trees layers are scan-stacked, so SEQ leaves carry the document
@@ -209,22 +224,36 @@ class StoredSegment:
     #: extra document ids whose descriptor indexes also reference this
     #: segment (decode-time forks share their base document's prefix)
     aliases: set = field(default_factory=set)
+    #: residency rung: "device" (live jax arrays), "host" (NumPy mirror),
+    #: or "disk" (``caches is None``; payload behind ``spill``)
+    tier: str = "device"
+    #: bucketed SEQ-axis capacity; stored rather than derived because a
+    #: disk-resident segment has no cache tree to measure
+    capacity: int = 0
+    #: disk-tier state: {"file", "record", "sha256"}.  Retained across a
+    #: promotion — the payload is frozen, so re-demoting to disk while the
+    #: spill file survives is a metadata flip, and snapshots can hard-link
+    #: the spill file instead of re-serializing.
+    spill: Optional[dict] = field(default=None, repr=False)
+    #: spill payload whose background write has not landed yet; promotions
+    #: and snapshots read this write-through copy until the worker clears it
+    pending_arrays: Optional[dict] = field(default=None, repr=False)
 
     def __post_init__(self):
         if not self.valid:
             self.valid = self.rng.size
-
-    @property
-    def capacity(self) -> int:
-        """Bucketed SEQ-axis length the segment occupies (0 if pure-state)."""
-        return cache_len(self.caches)
+        if self.caches is not None:
+            if not self.capacity:
+                self.capacity = cache_len(self.caches)
+            self.nbytes  # prime while caches exist (shape metadata only)
 
     @cached_property
     def nbytes(self) -> int:
         # caches are immutable once stored; computed once so eviction scans
-        # (which score every candidate) never re-walk the leaf tree.  This
-        # is the *padded* residency — what the byte budget actually pays —
-        # not the valid slice.
+        # (which score every candidate) never re-walk the leaf tree — and
+        # so the figure survives demotion, when the tree leaves device
+        # memory or the entry altogether.  This is the *padded* residency —
+        # what the byte budget actually pays — not the valid slice.
         return cache_nbytes(self.caches)
 
     def doc_ids(self) -> set:
@@ -248,14 +277,18 @@ class SegmentStore(PinnedStore):
                  cost_model: Optional[CostModel] = None,
                  policy: Optional[str] = None,
                  seq_bucket: int = 64,
-                 admit_prior: Optional[str] = None) -> None:
+                 admit_prior: Optional[str] = None,
+                 host_budget: Optional[int] = None,
+                 spill_dir: Optional[str | Path] = None,
+                 tier_policy: Optional[str] = None,
+                 writer: Optional[BackgroundWriter] = None) -> None:
         # a serving store's default calibration is the serving one — a
         # standalone-constructed store (e.g. SegmentStore.load at process
         # start) must price F/C like the engines that will adopt it, or
         # the planner would re-prefill everything the snapshot holds
         if cost_model is None:
             cost_model = serve_cost_model()
-        super().__init__(cost_model=cost_model, policy=policy)
+        super().__init__(cost_model=cost_model, policy=policy, writer=writer)
         self._indexes: dict[str, DescriptorIndex] = {}
         self._segs: dict[str, StoredSegment] = {}
         self._seq = 0
@@ -281,6 +314,34 @@ class SegmentStore(PinnedStore):
             raise ValueError(f"unknown admission prior {admit_prior!r}; "
                              f"expected 'observed' or 'static'")
         self.admit_prior = admit_prior
+        # residency tiers: byte_budget caps the *device* tier; host_budget
+        # (if set) enables and caps the host-RAM tier; spill_dir (if set)
+        # enables the disk tier, unbounded — disk is the capacity floor.
+        # With neither configured the store is plain drop-under-budget,
+        # byte-for-byte the pre-tier behaviour.
+        self.host_budget = host_budget
+        self.spill_dir = Path(spill_dir) if spill_dir is not None else None
+        if tier_policy is None:
+            tier_policy = os.environ.get("REPRO_TIER_POLICY", "tiered")
+        if tier_policy not in TIER_POLICIES:
+            raise ValueError(f"unknown tier policy {tier_policy!r}; "
+                             f"expected one of {TIER_POLICIES}")
+        self.tier_policy = tier_policy
+        self.demotions = {"host": 0, "disk": 0}
+        self.promotions = {"host": 0, "disk": 0}
+        self.demoted_bytes = 0
+        self.promoted_bytes = 0
+        self.prefetches = 0
+        self.spill_writes = 0
+        self.swept_spills = 0
+        #: prefetch() skips documents whose observed reuse prior is below
+        #: this — one-off tenants aren't worth speculative promotion
+        #: traffic (a fresh document's prior is the static 1.0, so it
+        #: always qualifies)
+        self.prefetch_min_prior = 0.25
+        #: spill files whose unlink was deferred past an in-flight
+        #: background save that may still hard-link from them
+        self._orphan_spills: list[Path] = []
 
     def index(self, doc_id: str = DEFAULT_DOC) -> DescriptorIndex:
         if doc_id not in self._indexes:
@@ -327,8 +388,12 @@ class SegmentStore(PinnedStore):
         if seg_id is None:
             self._seq += 1
             seg_id = f"kv:{doc_id}:{rng.lo}-{rng.hi}#{self._seq}"
-        # replacing an id invalidates any snapshot file cached under it
-        self._entry_records.pop(seg_id, None)
+        # replacing an id invalidates any snapshot file cached under it —
+        # and any spill file, which holds the *old* payload
+        self._invalidate_record(seg_id)
+        old = self._segs.get(seg_id)
+        if old is not None:
+            self._drop_spill(old)
         self._segs[seg_id] = StoredSegment(seg_id, rng, caches, doc_id=doc_id,
                                            valid=rng.size,
                                            created_by=created_by)
@@ -346,6 +411,9 @@ class SegmentStore(PinnedStore):
                 and requester != seg.created_by:
             seg.cross_session_hits += 1
             self.cross_session_hits += 1
+        if seg.tier != "device":
+            # transparent tier hit: the caller pays promote_s, not F(n)
+            self._promote(seg)
         return seg
 
     # -- admission priors from observed traffic ----------------------------
@@ -436,13 +504,30 @@ class SegmentStore(PinnedStore):
                 if seg.aliases:
                     seg.doc_id = seg.aliases.pop()  # promote a live reference
                 elif sid not in self._pins:  # never drop under an in-flight plan
+                    self._drop_spill(seg)
                     del self._segs[sid]
                     dropped += 1
         return dropped
 
     def nbytes(self, doc_id: Optional[str] = None) -> int:
+        """Total resident bytes across *all* tiers (see ``tier_bytes`` for
+        the split; the device-tier figure is what ``byte_budget`` caps)."""
         return sum(s.nbytes for s in self._segs.values()
                    if doc_id is None or doc_id in s.doc_ids())
+
+    def tier_bytes(self) -> dict[str, int]:
+        """Resident bytes per tier: ``{"device", "host", "disk"}``."""
+        out = {"device": 0, "host": 0, "disk": 0}
+        for s in self._segs.values():
+            out[s.tier] += s.nbytes
+        return out
+
+    def device_nbytes(self) -> int:
+        return sum(s.nbytes for s in self._segs.values()
+                   if s.tier == "device")
+
+    def host_nbytes(self) -> int:
+        return sum(s.nbytes for s in self._segs.values() if s.tier == "host")
 
     def __len__(self) -> int:
         return len(self._segs)
@@ -458,6 +543,7 @@ class SegmentStore(PinnedStore):
         return self._segs
 
     def _evict(self, victim: StoredSegment) -> None:
+        self._drop_spill(victim)
         del self._segs[victim.seg_id]
         for doc_id in victim.doc_ids():
             idx = self._indexes.get(doc_id)
@@ -470,6 +556,248 @@ class SegmentStore(PinnedStore):
                 del self._indexes[doc_id]
         self.evicted_bytes += victim.nbytes
 
+    # -- residency tiers (device -> host -> disk) --------------------------
+    # The byte budget caps the device tier only; pressure relief consults
+    # the cost model per victim (_relegate), a host budget cascades into
+    # disk spill (_enforce_tiers), and hits/prefetches promote back up.
+    # Demote->promote round-trips are bit-exact copies of the padded
+    # buffers, so token streams are identical to an untiered run.
+
+    def _pressure_nbytes(self) -> int:
+        return self.device_nbytes()
+
+    def _evictable(self, entry: StoredSegment) -> bool:
+        # the device loop only handles device residents; host residents
+        # answer to the host budget, disk is the floor
+        return entry.tier == "device"
+
+    def _demotion_tiers(self) -> tuple:
+        if self.tier_policy != "tiered":
+            return ()
+        tiers = []
+        if self.host_budget is not None:
+            tiers.append("host")
+        if self.spill_dir is not None:
+            tiers.append("disk")
+        return tuple(tiers)
+
+    def _relegate(self, victim: StoredSegment) -> bool:
+        tiers = self._demotion_tiers()
+        action = "drop"
+        if tiers:
+            action = self.cost.demotion_action(
+                victim.valid, victim.nbytes, tiers=tiers,
+                expected_reuses=self.admission_prior(victim.doc_id))
+        if action == "drop":
+            if len(self._segs) <= 1:
+                return False
+            self._evict(victim)
+            self.evictions += 1
+            return True
+        self._demote(victim, action)
+        return True
+
+    def _enforce_tiers(self) -> None:
+        if self.host_budget is None:
+            return
+        while self.host_nbytes() > self.host_budget:
+            candidates = [s for s in self._segs.values()
+                          if s.tier == "host" and s.seg_id not in self._pins]
+            if not candidates:
+                break
+            victim = self._pick_victim(candidates)
+            if self.spill_dir is not None and self.tier_policy == "tiered":
+                self._demote(victim, "disk")
+            else:
+                if len(self._segs) <= 1:
+                    break
+                self._evict(victim)
+                self.evictions += 1
+
+    def _demote(self, seg: StoredSegment, tier: str) -> None:
+        nb = seg.nbytes
+        if tier == "disk" and seg.spill is not None \
+                and (seg.spill.get("sha256") or seg.pending_arrays is not None):
+            # the payload is frozen and its spill bytes still exist (the
+            # segment was promoted earlier): re-demotion is a metadata flip
+            seg.caches = None
+            seg.tier = "disk"
+        else:
+            if seg.tier == "device":
+                # two-phase d2h: start every leaf's transfer before
+                # gathering, so the copies overlap instead of serializing
+                for x in jax.tree.leaves(seg.caches):
+                    start = getattr(x, "copy_to_host_async", None)
+                    if start is not None:
+                        start()
+                seg.caches = jax.tree.map(np.asarray, seg.caches)
+                seg.tier = "host"
+            if tier == "disk":
+                self._spill(seg)
+        self.demotions[tier] += 1
+        self.demoted_bytes += nb
+
+    def _spill_path(self, seg_id: str) -> Path:
+        d = self.spill_dir
+        d.mkdir(parents=True, exist_ok=True)
+        return d / f"seg-{hashlib.sha1(seg_id.encode()).hexdigest()[:20]}.npz"
+
+    def _segment_record(self, seg: StoredSegment, spec) -> dict:
+        """The immutable manifest record — shared by snapshot entries and
+        spill files, which is what lets the two hard-link each other."""
+        return {
+            "seg_id": seg.seg_id,
+            "lo": seg.rng.lo,
+            "hi": seg.rng.hi,
+            "valid": seg.valid,
+            "capacity": seg.capacity,
+            "nbytes": seg.nbytes,
+            "tree": spec,
+        }
+
+    def _spill(self, seg: StoredSegment) -> None:
+        """Move a host-resident payload into a spill file (PR 4 npz entry
+        format) on the background writer.  Write-through: the entry flips
+        to disk immediately and ``pending_arrays`` serves promotions and
+        snapshots until the worker lands the file and publishes its hash.
+        """
+        spec, leaves = flatten_tree(seg.caches)
+        arrays = {f"leaf_{j}": np.asarray(x) for j, x in enumerate(leaves)}
+        record = self._segment_record(seg, spec)
+        path = self._spill_path(seg.seg_id)
+        spill = {"file": str(path), "record": record, "sha256": None}
+        seg.spill = spill
+        seg.pending_arrays = arrays
+
+        def _write() -> None:
+            tmp = path.with_name(f".{path.name}.tmp-{os.getpid()}")
+            with open(tmp, "wb") as f:
+                np.savez(f, **arrays)
+            sha = hashlib.sha256(tmp.read_bytes()).hexdigest()
+            os.replace(tmp, path)
+            # publish completion only after the file is in place: readers
+            # seeing pending_arrays cleared may trust the file, and
+            # snapshots only hard-link a spill with a recorded hash
+            spill["sha256"] = sha
+            seg.pending_arrays = None
+
+        if not self._ensure_writer().submit(_write):
+            _write()  # queue full: spills must land; pay for it inline
+        seg.caches = None
+        seg.tier = "disk"
+        self.spill_writes += 1
+
+    def _load_spill_arrays(self, seg: StoredSegment) -> list[np.ndarray]:
+        pending = seg.pending_arrays
+        if pending is not None:
+            return [pending[f"leaf_{j}"] for j in range(len(pending))]
+        with np.load(seg.spill["file"]) as z:
+            return [z[f"leaf_{j}"] for j in range(len(z.files))]
+
+    def _drop_spill(self, seg: StoredSegment) -> None:
+        sp, seg.spill, seg.pending_arrays = seg.spill, None, None
+        if sp is None:
+            return
+        path = Path(sp["file"])
+        with self._records_lock:
+            busy = self._save_pending
+        if busy or (self._writer is not None and self._writer.depth() > 0):
+            # an in-flight background job may still read/link this file;
+            # defer the unlink until the writer drains (flush_saves)
+            self._orphan_spills.append(path)
+            return
+        try:
+            path.unlink()
+        except OSError:
+            return
+        self.swept_spills += 1
+
+    def flush_saves(self) -> float:
+        dt = super().flush_saves()
+        for path in self._orphan_spills:
+            try:
+                path.unlink()
+            except OSError:
+                continue
+            self.swept_spills += 1
+        self._orphan_spills.clear()
+        return dt
+
+    def _promote(self, seg: StoredSegment) -> None:
+        """Bring a demoted segment back to the device tier.
+
+        A promotion is a slow build the cost model already priced
+        (``promote_s``): host residents pay one async h2d dispatch, disk
+        residents a spill-file read first.  The spill record is *kept* —
+        the payload is frozen, so a later re-demotion to disk is free.
+
+        The device tier may transiently exceed its budget afterwards:
+        promotions deliberately do **not** re-enforce it, or a hit under
+        pressure could demote its own segment back before the caller
+        reads the caches.  The next store mutation (put / unpin) settles
+        the budget — the same transient the pad-before-admit decode path
+        already rides.
+        """
+        src = seg.tier
+        if src == "device":
+            return
+        if src == "disk":
+            spec = seg.spill["record"]["tree"]
+            leaves = self._load_spill_arrays(seg)
+            seg.caches = unflatten_tree(spec, leaves, leaf_fn=jnp.asarray)
+        else:
+            seg.caches = jax.tree.map(jnp.asarray, seg.caches)
+        seg.tier = "device"
+        self.promotions[src] += 1
+        self.promoted_bytes += seg.nbytes
+
+    def promote(self, sid: str) -> StoredSegment:
+        """Explicitly promote ``sid`` to device (no hit accounting)."""
+        seg = self._segs[sid]
+        self._promote(seg)
+        return seg
+
+    def prefetch(self, doc_id: str, *, upto: Optional[int] = None) -> int:
+        """Promote a document's demoted segments ahead of use.
+
+        Called at submit time, before the plan is even computed, so disk
+        reads and h2d copies overlap the planning/build work.  Gated by
+        the admission prior: documents whose observed traffic says they
+        don't come back (prior below ``prefetch_min_prior``) are left
+        where they are and pay promotion lazily at first touch.  Segments
+        at or past ``upto`` (the request's prefix length) are skipped.
+        Returns the number of segments promoted.
+        """
+        if doc_id not in self._indexes:
+            return 0
+        if self.admission_prior(doc_id) < self.prefetch_min_prior:
+            return 0
+        n = 0
+        for sid, rng in list(self.index(doc_id).items()):
+            if upto is not None and rng.lo >= upto:
+                continue
+            seg = self._segs.get(sid)
+            if seg is not None and seg.tier != "device":
+                self._promote(seg)
+                n += 1
+        self.prefetches += n
+        return n
+
+    def prefetch_ids(self, ids) -> int:
+        """Promote the listed segments (a plan's reuse steps, already
+        pinned by the caller) so their reads start before the jitted
+        build consumes them.  Returns the number promoted."""
+        n = 0
+        for sid in ids:
+            if sid is None:
+                continue
+            seg = self._segs.get(sid)
+            if seg is not None and seg.tier != "device":
+                self._promote(seg)
+                n += 1
+        self.prefetches += n
+        return n
+
     # -- persistence (PinnedStore hooks) -----------------------------------
     # Segments round-trip through the shared npz-plus-manifest machinery in
     # repro.core.store.PinnedStore: one entry file per segment (the cache
@@ -481,35 +809,63 @@ class SegmentStore(PinnedStore):
     # id) and is deliberately dropped.
 
     def _serialize_entry(self, seg: StoredSegment) -> tuple[dict, dict]:
+        if seg.caches is None:
+            # disk-tier: the payload lives in the spill file (or, mid-
+            # write, in the pending arrays); no device round-trip needed
+            record = dict(seg.spill["record"])
+            leaves = self._load_spill_arrays(seg)
+            arrays = {f"leaf_{j}": np.asarray(x)
+                      for j, x in enumerate(leaves)}
+            return arrays, record
         spec, leaves = flatten_tree(seg.caches)
         arrays = {f"leaf_{j}": np.asarray(x) for j, x in enumerate(leaves)}
-        record = {
-            "seg_id": seg.seg_id,
-            "lo": seg.rng.lo,
-            "hi": seg.rng.hi,
-            "valid": seg.valid,
-            "capacity": seg.capacity,
-            "tree": spec,
-        }
-        return arrays, record
+        return arrays, self._segment_record(seg, spec)
+
+    def _entry_file_source(self, key: str, entry: StoredSegment):
+        src = super()._entry_file_source(key, entry)
+        if src is not None:
+            return src
+        # a disk-tier segment's spill file *is* its snapshot entry (same
+        # npz format, hash known once the background write lands) — link
+        # it instead of deserializing the spill just to re-serialize it
+        sp = entry.spill
+        if sp is not None and sp.get("sha256") and entry.pending_arrays is None:
+            rec = dict(sp["record"])
+            rec["sha256"] = sp["sha256"]
+            return Path(sp["file"]), rec
+        return None
 
     def _entry_manifest(self, seg: StoredSegment) -> dict:
         # fields that keep changing after the payload freezes live outside
         # the cached immutable record, so incremental saves (which reuse
         # the npz file verbatim) still write current values into every
         # manifest: alias sets and cross-session hits mutate with traffic,
-        # and doc_id itself is promoted to a surviving alias when
-        # release_doc() retires a fork the segment belonged to
+        # the residency tier moves with demotions/promotions, and doc_id
+        # itself is promoted to a surviving alias when release_doc()
+        # retires a fork the segment belonged to
         return {"doc_id": seg.doc_id,
                 "aliases": sorted(seg.aliases),
-                "cross_session_hits": seg.cross_session_hits}
+                "cross_session_hits": seg.cross_session_hits,
+                "tier": seg.tier}
 
     def _deserialize_entry(self, rec: dict, arrays) -> str:
-        leaves = [arrays[f"leaf_{j}"] for j in range(len(arrays.files))]
-        caches = unflatten_tree(rec["tree"], leaves, leaf_fn=jnp.asarray)
         rng = Range(rec["lo"], rec["hi"])
-        sid = self.put(rng, caches, doc_id=rec["doc_id"],
-                       seg_id=rec["seg_id"])
+        # honor the snapshot's recorded tier when this store has the tier
+        # configured — a restarted tiered server comes back with the same
+        # residency split (and cold disk entries never touch the device)
+        tier = rec.get("tier", "device")
+        if tier == "host" and self.host_budget is None:
+            tier = "device"
+        if tier == "disk" and (self.spill_dir is None or "nbytes" not in rec
+                               or self._load_src is None):
+            tier = "device"
+        if tier == "device":
+            leaves = [arrays[f"leaf_{j}"] for j in range(len(arrays.files))]
+            caches = unflatten_tree(rec["tree"], leaves, leaf_fn=jnp.asarray)
+            sid = self.put(rng, caches, doc_id=rec["doc_id"],
+                           seg_id=rec["seg_id"])
+        else:
+            sid = self._insert_demoted(rec, arrays, rng, tier)
         # a tighter budget than the snapshot's can evict the segment on
         # its own insertion (fresh entries score worst); shed it quietly —
         # the base load guards its retention restore the same way
@@ -520,6 +876,39 @@ class SegmentStore(PinnedStore):
         for alias_doc in rec.get("aliases", []):
             seg.aliases.add(alias_doc)
             self.index(alias_doc).add(sid, rng)
+        return sid
+
+    def _insert_demoted(self, rec: dict, arrays, rng: Range,
+                        tier: str) -> str:
+        """Reload a snapshot entry directly into its recorded lower tier:
+        host entries as NumPy trees, disk entries as metadata only (the
+        snapshot's npz file is hard-linked into the spill dir), so
+        restarting a tiered store never materializes its cold tail."""
+        sid = rec["seg_id"]
+        old = self._segs.get(sid)
+        if old is not None:
+            self._drop_spill(old)
+        seg = StoredSegment(sid, rng, None, doc_id=rec["doc_id"],
+                            valid=int(rec["valid"]), tier=tier,
+                            capacity=int(rec["capacity"]))
+        if tier == "host":
+            leaves = [np.asarray(arrays[f"leaf_{j}"])
+                      for j in range(len(arrays.files))]
+            seg.caches = unflatten_tree(rec["tree"], leaves)
+        else:
+            seg.__dict__["nbytes"] = int(rec["nbytes"])
+            path = self._spill_path(sid)
+            if path.exists():
+                path.unlink()
+            _link_or_copy(self._load_src, path)
+            record = {k: rec[k] for k in ("seg_id", "lo", "hi", "valid",
+                                          "capacity", "nbytes", "tree")}
+            seg.spill = {"file": str(path), "record": record,
+                         "sha256": rec["sha256"]}
+        self._segs[sid] = seg
+        self.index(rec["doc_id"]).add(sid, rng)
+        self._doc_stats.setdefault(rec["doc_id"], [0, 0])[0] += 1
+        self._maybe_evict()
         return sid
 
     def _store_meta(self) -> dict:
@@ -548,15 +937,26 @@ class SegmentStore(PinnedStore):
              cost_model: Optional[CostModel] = None,
              policy: Optional[str] = None,
              admit_prior: Optional[str] = None,
+             host_budget: Optional[int] = None,
+             spill_dir: Optional[str | Path] = None,
+             tier_policy: Optional[str] = None,
+             writer: Optional[BackgroundWriter] = None,
              verify: bool = True) -> "SegmentStore":
         """Rebuild a serving store from a :meth:`PinnedStore.save` snapshot.
 
         The snapshot dictates ``seq_bucket`` (stored shapes are only
         shape-stable under the bucket they were padded for); budget, cost
-        model, and policy are fresh runtime choices.  Loaded leaves are
-        moved onto the default device eagerly so the first warm hit pays
-        no host-to-device copy inside the jitted insert path.
+        model, policy, and tier configuration are fresh runtime choices.
+        Entries whose recorded tier is available on this store reload
+        *into that tier* — device leaves move onto the device eagerly so
+        the first warm hit pays no h2d copy inside the jitted insert
+        path, host entries stay NumPy, and disk entries stay on disk
+        (their snapshot files linked into ``spill_dir``) until promoted.
+        Without tier configuration everything loads to device, exactly
+        the pre-tier behaviour.
         """
         return super().load(path, verify=verify, byte_budget=byte_budget,
                             cost_model=cost_model, policy=policy,
-                            admit_prior=admit_prior)
+                            admit_prior=admit_prior, host_budget=host_budget,
+                            spill_dir=spill_dir, tier_policy=tier_policy,
+                            writer=writer)

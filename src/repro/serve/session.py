@@ -367,6 +367,11 @@ class SessionManager:
             # last chance to write the previous request's generated KV back
             # before prefix_with_logits replaces the session caches
             self._materialize_decode(s)
+        # prior-driven prefetch: start promoting this document's demoted
+        # segments (host/disk -> device) before the plan is computed, so
+        # tier reads overlap planning and build dispatch; documents whose
+        # observed traffic never returns are skipped (prefetch_min_prior)
+        self.store.prefetch(s.doc_id, upto=prefix_len)
         if self.async_prefill:
             logits, caches, plan, pending = self.builder.prefix_with_logits(
                 s.doc, prefix_len, doc_id=s.doc_id, extras=s.extras,
@@ -675,6 +680,8 @@ class SessionManager:
         """
         agg = self.aggregate_stats()
         sc = self.sched
+        st = self.store
+        tiers = st.tier_bytes()
         return {
             "requests": agg.requests,
             "tokens_decoded": agg.tokens_decoded,
@@ -693,6 +700,24 @@ class SessionManager:
             "mean_join_wait_s": sc.mean_join_wait_s,
             "overlap_steps": sc.overlap_steps,
             "overlap_batch": sc.overlap_batch,
+            # per-tier occupancy and traffic (device -> host -> disk).
+            # All plain ints/floats from counters, so an idle manager
+            # reports finite zeros like everything above.
+            "device_bytes": tiers["device"],
+            "host_bytes": tiers["host"],
+            "disk_bytes": tiers["disk"],
+            "promotions": st.promotions["host"] + st.promotions["disk"],
+            "promotions_host": st.promotions["host"],
+            "promotions_disk": st.promotions["disk"],
+            "demotions": st.demotions["host"] + st.demotions["disk"],
+            "demotions_host": st.demotions["host"],
+            "demotions_disk": st.demotions["disk"],
+            "prefetches": st.prefetches,
+            "spill_writes": st.spill_writes,
+            "bg_save_queue": st.writer.depth() if st.writer is not None else 0,
+            "bg_saves": st.bg_saves,
+            "bg_save_drops": st.bg_save_drops,
+            "save_stall_s": st.save_stall_s,
         }
 
 

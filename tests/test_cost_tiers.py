@@ -1,0 +1,146 @@
+"""Cost-model tier pricing and admission/retention boundary cases.
+
+The demotion decision trades in the same expected-future-seconds currency
+as ``admit`` and the eviction retention score: ``demotion_cost_s`` = pay
+the move now + per expected hit, the promotion back (or the full rebuild
+for ``drop``).  These tests pin the boundary behaviour the serving store
+leans on — zero-byte entries, ``expected_reuses=0`` one-off tenants
+(0.0 must not be mistaken for "use the default"), and prior stats across
+a ``release_doc`` -> re-put cycle.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cost import CostModel, serve_cost_model
+from repro.core.descriptors import Range
+from repro.serve.kv_cache import SegmentStore, StoredSegment
+
+
+def _seg(tokens: int, width: int = 4):
+    return {"k": jnp.zeros((1, 1, tokens, 2, width), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# tier transfer pricing
+# ---------------------------------------------------------------------------
+
+def test_promote_demote_pricing_shape():
+    cm = CostModel()
+    nb = 1 << 20
+    assert cm.promote_s(nb, "device") == 0.0
+    assert 0.0 < cm.promote_s(nb, "host") < cm.promote_s(nb, "disk")
+    # disk pays the fixed open on top of both transfers
+    assert cm.promote_s(nb, "disk") >= cm.disk_fixed_s
+    assert cm.demote_s(nb, "drop") == 0.0
+    assert cm.demote_s(nb, "host", source="host") == 0.0  # already there
+    assert 0.0 < cm.demote_s(nb, "host") < cm.demote_s(nb, "disk")
+    # spilling from host skips the d2h leg
+    assert cm.demote_s(nb, "disk", source="host") < cm.demote_s(nb, "disk")
+
+
+def test_demotion_cost_drop_is_expected_rebuild():
+    cm = serve_cost_model()
+    assert cm.demotion_cost_s(500, 1 << 20, "drop") == pytest.approx(
+        cm.expected_reuses * cm.recompute_s(500))
+    assert cm.demotion_cost_s(500, 1 << 20, "drop",
+                              expected_reuses=3.0) == pytest.approx(
+        3.0 * cm.recompute_s(500))
+
+
+def test_demotion_action_prefers_cheapest_shelf():
+    cm = serve_cost_model()
+    n, nb = 512, 1 << 20
+    # a reusable segment with a real rebuild cost: host < disk < drop
+    assert cm.demotion_action(n, nb) == "host"
+    # host unavailable -> disk still beats rebuilding half a KB of KV
+    assert cm.demotion_action(n, nb, tiers=("disk",)) == "disk"
+    # one-off tenant (expected_reuses=0.0, NOT treated as "default"):
+    # nothing ever comes back, so any shelf is wasted motion
+    assert cm.demotion_action(n, nb, expected_reuses=0.0) == "drop"
+    # tiny valid extent: the rebuild is cheaper than a disk round-trip
+    assert cm.demotion_action(2, 256, tiers=("disk",)) == "drop"
+
+
+def test_demotion_action_tie_prefers_faster_tier():
+    # an infinitely fast, zero-latency disk prices exactly like host RAM
+    # (both reduce to the d2h + h2d transfers): the faster tier must win
+    cm = CostModel(disk_bytes_per_s=float("inf"), disk_fixed_s=0.0)
+    n, nb = 100_000, 1 << 20
+    assert cm.demotion_cost_s(n, nb, "host") == pytest.approx(
+        cm.demotion_cost_s(n, nb, "disk"))
+    assert cm.demotion_action(n, nb) == "host"
+
+
+# ---------------------------------------------------------------------------
+# admission boundary cases
+# ---------------------------------------------------------------------------
+
+def test_admit_zero_extent_zero_bytes_rejected():
+    cm = serve_cost_model()
+    # F(0) = 0, C(0) = model_fixed_s > 0: storing nothing can never win
+    assert cm.reuse_benefit_s(0, 0) < 0
+    assert not cm.admit(0, 0)
+
+
+def test_admit_zero_byte_entry_with_extent():
+    cm = serve_cost_model()
+    # a zero-byte entry covering real extent costs only the fixed lookup;
+    # admitted iff the rebuild it saves clears that fixed cost
+    assert cm.admit(500, 0)
+    assert cm.reuse_benefit_s(500, 0) == pytest.approx(
+        cm.fetch_points(500) - cm.model_fixed_s)
+
+
+def test_admit_expected_reuses_zero_is_not_default():
+    cm = serve_cost_model()
+    n, nb = 500, 4096
+    assert cm.admit(n, nb)                         # default prior (1.0) wins
+    assert not cm.admit(n, nb, expected_reuses=0.0)  # 0.0 is 0, not None
+
+
+def test_retention_score_zero_byte_entry_finite():
+    store = SegmentStore(seq_bucket=8)
+    seg = StoredSegment("z", Range(0, 8), {}, valid=8)
+    assert seg.nbytes == 0
+    score = store.retention_score(seg)
+    assert score > 0
+    assert score == pytest.approx(
+        store.cost.recompute_s(8) * store.cost.expected_reuses, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# prior stats across release_doc -> re-put
+# ---------------------------------------------------------------------------
+
+def test_prior_resets_across_release_and_reput():
+    store = SegmentStore(seq_bucket=8)
+    static = store.cost.expected_reuses
+    hot = store.put(Range(0, 8), _seg(8), doc_id="d")
+    for _ in range(6):
+        store.get(hot)
+    assert store.admission_prior("d") > static
+    # retiring the document retires its traffic history with it …
+    store.release_doc("d")
+    assert hot not in store
+    assert store.admission_prior("d") == pytest.approx(static)
+    # … so a re-put under the same id starts from the static prior again
+    store.put(Range(0, 8), _seg(8), doc_id="d")
+    assert store.admission_prior("d") < static  # 1 put, 0 hits: decays
+    assert store.admission_prior("d") > 0
+
+
+def test_release_doc_drops_spill_files(tmp_path):
+    nb = StoredSegment("t", Range(0, 8), _seg(8), valid=8).nbytes
+    store = SegmentStore(byte_budget=2 * nb + 1, seq_bucket=8,
+                         host_budget=nb + 1, spill_dir=tmp_path / "spill")
+    for i in range(5):
+        store.put(Range(8 * i, 8 * i + 8), _seg(8), doc_id="gone")
+    store.flush_saves()
+    paths = [s.spill["file"] for s in store._segs.values()
+             if s.tier == "disk"]
+    assert paths
+    store.release_doc("gone")
+    store.flush_saves()
+    import os
+
+    assert not any(os.path.exists(p) for p in paths)

@@ -1,0 +1,453 @@
+"""Tiered segment residency (device -> host -> disk) and background saves.
+
+Contracts pinned here:
+
+  * **cost-priced demotion** — under device-byte pressure, reusable
+    segments demote to host RAM (NumPy) instead of being dropped; a host
+    budget cascades the coldest overflow into disk spill files; the
+    ``evict`` policy (flag or ``REPRO_TIER_POLICY``) restores drop-only;
+  * **transparent promotion** — ``get`` on a demoted segment brings it
+    back to device with bit-identical payload bytes; a promoted segment
+    keeps its spill record so re-demotion to disk is a free metadata
+    flip (no second spill write); pinned segments are never demoted;
+  * **tiered persistence** — a snapshot taken of a tiered store reloads
+    into the same residency split when the tiers are configured, and
+    all-device when they are not (pre-tier snapshots and plain loads
+    behave exactly as before); disk entries round-trip through
+    hard-linked spill files without materializing;
+  * **background saves** — ``save_async`` runs the same atomic snapshot
+    protocol off-thread, coalesces overlapping requests, records worker
+    failures in ``save_errors`` while the previous snapshot stays
+    loadable, and ``save()`` after a crash recovers;
+  * **snapshot hygiene** — ``load`` ignores and sweeps entry files a
+    crashed compaction stranded outside the manifest; compaction
+    rewrites the dir with single-reference files; hard-link failures
+    (cross-device dirs) fall back to copies.
+"""
+import errno
+import json
+import math
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.descriptors import Range
+from repro.core.store import MANIFEST_NAME, compact_snapshot_dir
+from repro.serve.kv_cache import SegmentStore, cache_nbytes
+
+
+def _seg(tokens: int, fill: float = 0.0, width: int = 4):
+    return {"k": jnp.full((1, 1, tokens, 2, width), fill, jnp.float32)}
+
+
+NB8 = cache_nbytes(_seg(8))
+
+
+def _tiered(tmp_path=None, *, byte_budget=2 * NB8 + 1, host_budget=64 * NB8,
+            **kw):
+    spill = dict(spill_dir=tmp_path / "spill") if tmp_path is not None else {}
+    return SegmentStore(byte_budget=byte_budget, seq_bucket=8,
+                        host_budget=host_budget, **spill, **kw)
+
+
+# ---------------------------------------------------------------------------
+# demotion and promotion
+# ---------------------------------------------------------------------------
+
+def test_demote_to_host_under_pressure():
+    store = _tiered()
+    sids = [store.put(Range(8 * i, 8 * i + 8), _seg(8, float(i)), doc_id="a")
+            for i in range(4)]
+    # nothing dropped: the squeezed bytes moved to the host tier
+    assert len(store) == 4 and store.evictions == 0
+    assert store.device_nbytes() <= store.byte_budget
+    assert store.demotions["host"] >= 2
+    tiers = store.tier_bytes()
+    assert tiers["host"] >= 2 * NB8 and tiers["disk"] == 0
+    assert tiers["device"] + tiers["host"] == store.nbytes()
+    host = [s for s in sids if store._segs[s].tier == "host"]
+    assert isinstance(
+        next(iter(store._segs[host[0]].caches.values())), np.ndarray)
+
+
+def test_get_promotes_transparently():
+    store = _tiered()
+    sids = [store.put(Range(8 * i, 8 * i + 8), _seg(8, float(i)), doc_id="a")
+            for i in range(4)]
+    victim = next(s for s in sids if store._segs[s].tier == "host")
+    fill = float(sids.index(victim))
+    got = store.get(victim)
+    assert got.tier == "device"
+    assert isinstance(got.caches["k"], jnp.ndarray)
+    np.testing.assert_array_equal(np.asarray(got.caches["k"]),
+                                  np.asarray(_seg(8, fill)["k"]))
+    assert store.promotions["host"] == 1
+    assert store.promoted_bytes == NB8
+
+
+def test_host_budget_cascades_to_disk(tmp_path):
+    store = _tiered(tmp_path, host_budget=NB8 + 1)
+    for i in range(5):
+        store.put(Range(8 * i, 8 * i + 8), _seg(8, float(i)), doc_id="a")
+    assert store.demotions["disk"] >= 1 and store.spill_writes >= 1
+    assert store.host_nbytes() <= store.host_budget
+    disk = [s for s in store._segs.values() if s.tier == "disk"]
+    assert disk and all(s.caches is None for s in disk)
+    store.flush_saves()
+    for s in disk:
+        assert os.path.exists(s.spill["file"])
+        assert s.spill["sha256"] and s.pending_arrays is None
+
+
+def test_disk_promote_and_free_redemotion(tmp_path):
+    store = _tiered(tmp_path, host_budget=NB8 + 1)
+    sids = [store.put(Range(8 * i, 8 * i + 8), _seg(8, float(i)), doc_id="a")
+            for i in range(5)]
+    store.flush_saves()
+    victim = next(s for s in sids if store._segs[s].tier == "disk")
+    fill = float(sids.index(victim))
+    got = store.get(victim)
+    assert got.tier == "device"
+    np.testing.assert_array_equal(np.asarray(got.caches["k"]),
+                                  np.asarray(_seg(8, fill)["k"]))
+    assert store.promotions["disk"] == 1
+    # the spill record survives promotion, so going back down is free
+    assert got.spill is not None
+    writes_before = store.spill_writes
+    store._demote(got, "disk")
+    assert got.tier == "disk" and got.caches is None
+    assert store.spill_writes == writes_before     # no second file write
+    np.testing.assert_array_equal(
+        np.asarray(store.get(victim).caches["k"]),
+        np.asarray(_seg(8, fill)["k"]))
+
+
+def test_evict_policy_drops_despite_tiers(tmp_path):
+    store = _tiered(tmp_path, tier_policy="evict")
+    for i in range(4):
+        store.put(Range(8 * i, 8 * i + 8), _seg(8), doc_id="a")
+    assert store.evictions >= 2 and len(store) <= 2
+    assert store.demotions == {"host": 0, "disk": 0}
+    assert store.tier_bytes()["host"] == 0
+
+
+def test_tier_policy_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_TIER_POLICY", "evict")
+    assert SegmentStore(seq_bucket=8).tier_policy == "evict"
+    monkeypatch.setenv("REPRO_TIER_POLICY", "bogus")
+    with pytest.raises(ValueError, match="tier policy"):
+        SegmentStore(seq_bucket=8)
+
+
+def test_pinned_segments_never_demoted():
+    store = _tiered()
+    first = store.put(Range(0, 8), _seg(8, 9.0), doc_id="a")
+    with store.pinned([first]):
+        for i in range(1, 5):
+            store.put(Range(8 * i, 8 * i + 8), _seg(8), doc_id="a")
+        assert store._segs[first].tier == "device"
+        assert first in store
+    # once unpinned it is fair game again
+    store.put(Range(40, 48), _seg(8), doc_id="a")
+    assert store.device_nbytes() <= store.byte_budget
+
+
+def test_prefetch_promotes_ahead_of_use():
+    store = _tiered()
+    sids = [store.put(Range(8 * i, 8 * i + 8), _seg(8), doc_id="a")
+            for i in range(4)]
+    # real traffic lifts the observed prior over the prefetch gate
+    device = next(s for s in sids if store._segs[s].tier == "device")
+    for _ in range(4):
+        store.get(device)
+    demoted = [s for s in sids if store._segs[s].tier == "host"]
+    n = store.prefetch("a")
+    assert n == len(demoted) > 0
+    assert store.prefetches == n
+    assert all(store._segs[s].tier == "device" for s in demoted)
+    # upto: segments at/past the requested prefix stay where they are
+    for i in range(4, 8):
+        store.put(Range(8 * i, 8 * i + 8), _seg(8), doc_id="a")
+    demoted_past = [s for s, seg in store._segs.items()
+                    if seg.tier != "device" and seg.rng.lo >= 8]
+    assert demoted_past
+    store.prefetch("a", upto=8)
+    assert all(store._segs[s].tier != "device" for s in demoted_past)
+
+
+def test_prefetch_gated_by_admission_prior():
+    store = _tiered()
+    for i in range(4):
+        store.put(Range(8 * i, 8 * i + 8), _seg(8), doc_id="oneoff")
+    # many puts, zero hits: the observed prior decays toward 0
+    for i in range(4, 10):
+        store.put(Range(8 * i, 8 * i + 8), _seg(8), doc_id="oneoff")
+    assert store.admission_prior("oneoff") < store.prefetch_min_prior
+    assert store.prefetch("oneoff") == 0
+
+
+# ---------------------------------------------------------------------------
+# tiered persistence
+# ---------------------------------------------------------------------------
+
+def _pressured_store(tmp_path):
+    store = _tiered(tmp_path, host_budget=2 * NB8 + 1)
+    sids = [store.put(Range(8 * i, 8 * i + 8), _seg(8, float(i)), doc_id="a")
+            for i in range(6)]
+    store.flush_saves()
+    return store, sids
+
+
+def test_tiered_save_load_roundtrip(tmp_path):
+    store, sids = _pressured_store(tmp_path)
+    split = {s: store._segs[s].tier for s in sids}
+    assert set(split.values()) == {"device", "host", "disk"}
+    store.save(tmp_path / "st")
+
+    loaded = SegmentStore.load(tmp_path / "st", byte_budget=store.byte_budget,
+                               host_budget=store.host_budget,
+                               spill_dir=tmp_path / "spill2")
+    assert len(loaded) == 6
+    assert {s: loaded._segs[s].tier for s in sids} == split
+    assert loaded.nbytes() == store.nbytes()
+    for s in sids:
+        orig, back = store._segs[s], loaded._segs[s]
+        assert back.valid == orig.valid and back.capacity == orig.capacity
+        assert back.nbytes == orig.nbytes
+        fill = float(sids.index(s))
+        np.testing.assert_array_equal(
+            np.asarray(loaded.get(s).caches["k"]),
+            np.asarray(_seg(8, fill)["k"]))
+
+
+def test_plain_load_materializes_all_device(tmp_path):
+    """Without tier configuration a tiered snapshot loads entirely to
+    device — the pre-tier contract for every existing consumer."""
+    store, sids = _pressured_store(tmp_path)
+    store.save(tmp_path / "st")
+    loaded = SegmentStore.load(tmp_path / "st")
+    assert len(loaded) == 6
+    assert all(s.tier == "device" for s in loaded._segs.values())
+    for s in sids:
+        np.testing.assert_array_equal(
+            np.asarray(loaded._segs[s].caches["k"]),
+            np.asarray(_seg(8, float(sids.index(s)))["k"]))
+
+
+def test_disk_entries_reload_without_materializing(tmp_path):
+    store, sids = _pressured_store(tmp_path)
+    store.save(tmp_path / "st")
+    loaded = SegmentStore.load(tmp_path / "st", byte_budget=store.byte_budget,
+                               host_budget=store.host_budget,
+                               spill_dir=tmp_path / "spill2")
+    disk = [s for s in loaded._segs.values() if s.tier == "disk"]
+    assert disk
+    for s in disk:
+        assert s.caches is None                  # never touched the device
+        assert s.spill["file"].startswith(str(tmp_path / "spill2"))
+        assert os.path.exists(s.spill["file"])
+
+
+# ---------------------------------------------------------------------------
+# background saves
+# ---------------------------------------------------------------------------
+
+def _two_entry_store():
+    store = SegmentStore(seq_bucket=8)
+    store.put(Range(0, 8), _seg(8, 1.0), doc_id="a")
+    store.put(Range(8, 16), _seg(8, 2.0), doc_id="a")
+    return store
+
+
+def test_save_async_equivalent_to_sync(tmp_path):
+    store = _two_entry_store()
+    assert store.save_async(tmp_path / "st") is True
+    stall = store.flush_saves()
+    assert stall >= 0.0 and store.save_stall_s >= stall
+    assert store.bg_saves == 1 and not store.save_errors
+    loaded = SegmentStore.load(tmp_path / "st")
+    assert len(loaded) == 2
+    assert loaded.nbytes() == store.nbytes()
+    # the async snapshot seeds the incremental cache like a sync one
+    store.save(tmp_path / "st")
+    assert store.last_save == {"written": 0, "reused": 2}
+
+
+def test_save_async_coalesces_overlapping_requests(tmp_path):
+    store = _two_entry_store()
+    store._ensure_writer().submit(lambda: time.sleep(0.3))  # keep it busy
+    assert store.save_async(tmp_path / "st") is True
+    assert store.save_async(tmp_path / "st") is False       # one in flight
+    assert store.bg_save_drops == 1
+    store.flush_saves()
+    assert store.bg_saves == 1
+    assert len(SegmentStore.load(tmp_path / "st")) == 2
+
+
+def test_background_save_crash_keeps_previous_snapshot(tmp_path, monkeypatch):
+    store = _two_entry_store()
+    target = tmp_path / "st"
+    store.save(target)
+    manifest_before = (target / MANIFEST_NAME).read_text()
+    store.put(Range(16, 24), _seg(8, 3.0), doc_id="a")
+
+    def exploding_savez(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "savez", exploding_savez)
+    assert store.save_async(target) is True
+    store.flush_saves()
+    monkeypatch.undo()
+    # the failure is recorded, the serving thread never saw an exception,
+    # and the previous snapshot is byte-identical and loadable
+    assert len(store.save_errors) == 1
+    assert isinstance(store.save_errors[0], OSError)
+    assert (target / MANIFEST_NAME).read_text() == manifest_before
+    assert len(SegmentStore.load(target)) == 2
+    # and the store is not wedged: the next (healthy) save goes through
+    assert store.save_async(target) is True
+    store.flush_saves()
+    assert store.bg_saves == 1 and len(store.save_errors) == 1
+    assert len(SegmentStore.load(target)) == 3
+
+
+def test_mutation_during_background_save_not_lost(tmp_path):
+    """An entry replaced while a background save is in flight must not get
+    the stale snapshot record installed (its next save re-serializes the
+    replacement's bytes instead of hard-linking the old file)."""
+    store = _two_entry_store()
+    target = tmp_path / "st"
+    a = next(iter(store._segs))
+    store._ensure_writer().submit(lambda: time.sleep(0.2))
+    assert store.save_async(target) is True
+    store.release_doc("a")                       # retire both entries …
+    store.put(Range(0, 8), _seg(8, 9.0), doc_id="a", seg_id=a)  # … replace
+    store.flush_saves()
+    assert store.bg_saves == 1
+    store.save(target)
+    loaded = SegmentStore.load(target)      # checksums verified
+    assert len(loaded) == 1
+    np.testing.assert_array_equal(np.asarray(loaded._segs[a].caches["k"]),
+                                  np.asarray(_seg(8, 9.0)["k"]))
+
+
+# ---------------------------------------------------------------------------
+# snapshot hygiene: stranded files, compaction, hard-link fallback
+# ---------------------------------------------------------------------------
+
+def test_load_sweeps_stranded_entry_files(tmp_path):
+    store = _two_entry_store()
+    target = tmp_path / "st"
+    store.save(target)
+    src = next(target.glob("entry_*.npz"))
+    stray = target / "entry_999990.npz"
+    stray.write_bytes(src.read_bytes())
+    (target / "entry_999991.npz").write_bytes(b"garbage")
+
+    loaded = SegmentStore.load(target)
+    assert len(loaded) == 2
+    assert loaded.swept_stranded == 2
+    assert not stray.exists()
+    assert sorted(p.name for p in target.glob("entry_*.npz")) == sorted(
+        rec["file"] for rec in json.loads(
+            (target / MANIFEST_NAME).read_text())["entries"])
+
+
+def test_compact_snapshot_dir(tmp_path):
+    store = _two_entry_store()
+    target = tmp_path / "st"
+    store.save(target)
+    store.put(Range(16, 24), _seg(8, 3.0), doc_id="a")
+    store.save(target)            # entries 0/1 are hard-linked generations
+    (target / "entry_777777.npz").write_bytes(b"stranded")
+    (target / "leftover.tmp").write_bytes(b"junk")
+
+    stats = compact_snapshot_dir(target)
+    assert stats == {"kept": 3, "dropped": 1}    # the stranded entry file
+    files = sorted(p.name for p in target.iterdir())
+    assert files == ["MANIFEST.json", "entry_000000.npz", "entry_000001.npz",
+                     "entry_000002.npz"]
+    # copies, not links: each file is the sole reference to its bytes
+    assert all(os.stat(target / f).st_nlink == 1 for f in files[1:])
+    loaded = SegmentStore.load(target)      # checksums verified
+    assert len(loaded) == 3
+
+
+def test_compact_snapshot_instance_keeps_incremental_cache(tmp_path):
+    store = _two_entry_store()
+    target = tmp_path / "st"
+    store.save(target)
+    assert store.compact_snapshot() == {"kept": 2, "dropped": 0}
+    store.save(target)
+    # the renumbered files still back the incremental cache
+    assert store.last_save == {"written": 0, "reused": 2}
+    assert len(SegmentStore.load(target)) == 2
+
+
+def test_hard_link_fallback_to_copy(tmp_path, monkeypatch):
+    """Filesystems without hard-link support (or cross-device snapshot
+    moves) degrade to copies: incremental saves still reuse entries."""
+    store = _two_entry_store()
+    target = tmp_path / "st"
+    store.save(target)
+    inode_before = {p.name: p.stat().st_ino for p in target.glob("entry_*")}
+
+    def no_link(src, dst, **kw):
+        raise OSError(errno.EXDEV, "Invalid cross-device link")
+
+    monkeypatch.setattr(os, "link", no_link)
+    store.put(Range(16, 24), _seg(8, 3.0), doc_id="a")
+    store.save(target)
+    assert store.last_save == {"written": 1, "reused": 2}
+    after = {p.name: p.stat().st_ino for p in target.glob("entry_*")}
+    # reused entries were copied into the new snapshot dir — new inodes
+    for name, ino in inode_before.items():
+        assert after[name] != ino
+    assert len(SegmentStore.load(target)) == 3      # checksums verified
+
+
+def test_orphan_spills_swept_after_flush(tmp_path):
+    store = _tiered(tmp_path, host_budget=NB8 + 1)
+    for i in range(5):
+        store.put(Range(8 * i, 8 * i + 8), _seg(8), doc_id="a")
+    store.flush_saves()
+    disk = [s.seg_id for s in store._segs.values() if s.tier == "disk"]
+    paths = [store._segs[s].spill["file"] for s in disk]
+    store._ensure_writer().submit(lambda: time.sleep(0.2))  # busy writer
+    for s in disk:
+        store._drop_spill(store._segs[s])
+    assert store._orphan_spills                       # unlink deferred
+    assert all(os.path.exists(p) for p in paths)
+    store.flush_saves()
+    assert not store._orphan_spills
+    assert not any(os.path.exists(p) for p in paths)
+    assert store.swept_spills == len(paths)
+
+
+# ---------------------------------------------------------------------------
+# per-tier reporting (idle manager stays finite)
+# ---------------------------------------------------------------------------
+
+def test_report_tier_keys_finite_on_idle_manager():
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.models.lm import LM
+    from repro.serve.session import SessionManager
+
+    cfg = reduced(ARCHS["deepseek-67b"])
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32)
+    rep = mgr.report()
+    for key in ("device_bytes", "host_bytes", "disk_bytes", "promotions",
+                "promotions_host", "promotions_disk", "demotions",
+                "demotions_host", "demotions_disk", "prefetches",
+                "spill_writes", "bg_save_queue", "bg_saves", "bg_save_drops",
+                "save_stall_s"):
+        assert key in rep, key
+        assert math.isfinite(rep[key]), key
+        assert rep[key] == 0, key
