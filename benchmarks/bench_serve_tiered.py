@@ -85,16 +85,19 @@ def tiered_pressure(n_docs: int = 3, doc_len: int = 192, rounds: int = 3,
     try:
         # host holds ~half the working set, so the coldest overflow keeps
         # cascading to disk — all three tiers carry traffic under pressure
+        # precision pinned fp32: this benchmark gates the PR 6 bit-exact
+        # residency contract (quantized residency has its own module,
+        # bench_serve_quant, with a tolerance-bounded parity check)
         tiered = mk(store=SegmentStore(
             byte_budget=budget, cost_model=serve_cost_model(), seq_bucket=32,
             host_budget=int(working_set * 0.5), spill_dir=spill_dir,
-            tier_policy="tiered"))
+            tier_policy="tiered", precision="fp32"))
         t_streams, t_reused, t_computed, wall = _replay(
             tiered, docs, rounds=rounds, n_new=n_new)
 
         evict = mk(store=SegmentStore(
             byte_budget=budget, cost_model=serve_cost_model(), seq_bucket=32,
-            tier_policy="evict"))
+            tier_policy="evict", precision="fp32"))
         e_streams, e_reused, e_computed, _ = _replay(
             evict, docs, rounds=rounds, n_new=n_new)
     finally:

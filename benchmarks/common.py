@@ -81,5 +81,15 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     for part in filter(None, derived.split(";")):
         k, _, val = part.partition("=")
         rec["derived"][k] = val
-    RECORDS.append(rec)
+    # names key the whole trajectory (BENCH_serve.json merges by name), so
+    # a re-measured benchmark replaces its record in place — appending
+    # unconditionally left duplicates in RECORDS whenever a module emitted
+    # twice in one process (re-runs, retried modules), and only the
+    # accidental last-wins of the downstream dict merge hid them
+    for i, old in enumerate(RECORDS):
+        if old["name"] == name:
+            RECORDS[i] = rec
+            break
+    else:
+        RECORDS.append(rec)
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -51,6 +51,7 @@ MODULES = [
     "benchmarks.bench_serve_reuse", # serving prefix-reuse (beyond-paper)
     "benchmarks.bench_serve_overlap",  # async prefill vs sync-loop stall
     "benchmarks.bench_serve_tiered",   # device/host/disk residency pressure
+    "benchmarks.bench_serve_quant",    # int8 residency at halved budgets
 ]
 
 

@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""Quantized-residency smoke: launch the serving driver under heavy byte
+pressure with ``--segment-precision auto``, restart it from its snapshot,
+and check the precision dimension actually engaged and round-tripped.
+
+Drives ``repro.launch.serve`` as a subprocess (the exact artifact a
+deployment runs) and asserts, from its stdout and the snapshot it wrote:
+
+  * the cost model quantized segments under pressure — the precision
+    report line shows >0 quantized events and int8 residents;
+  * a second launch warm-starts from the snapshot (int8 entries reload
+    as int8) and serves without background-save errors;
+  * the final snapshot loads cleanly in-process, its int8 payloads
+    dequantize to finite values bounded by their own per-block scales
+    (|x| <= 127·scale — the reconstruction envelope).
+
+Run from the repo root:  PYTHONPATH=src python scripts/quant_smoke.py
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+PRECISION_RE = (r"precision \(auto policy\): (\d+) int8 segments resident, "
+                r"(\d+) quantized")
+
+
+def _serve(store_dir: Path, spill_dir: Path) -> str:
+    cmd = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", "deepseek-67b", "--reduced",
+        "--doc-len", "512", "--sessions", "3", "--shared-docs", "1",
+        "--requests", "2", "--new-tokens", "4", "--chunk-tokens", "128",
+        "--byte-budget", "150000",   # half the tiered smoke's ~25%-WS budget
+        "--host-budget", "200000000",
+        "--spill-dir", str(spill_dir),
+        "--store-dir", str(store_dir),
+        "--segment-precision", "auto",
+        "--snapshot-every", "1", "--compact-final",
+    ]
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    assert proc.returncode == 0, f"serve exited {proc.returncode}"
+    m = re.search(r"errors (\d+)", proc.stdout)
+    assert m and int(m.group(1)) == 0, "background saves reported errors"
+    return proc.stdout
+
+
+def main() -> int:
+    with tempfile.TemporaryDirectory() as d:
+        store_dir = Path(d) / "kvstore"
+        spill_dir = Path(d) / "kvspill"
+
+        out = _serve(store_dir, spill_dir)
+        m = re.search(PRECISION_RE, out)
+        assert m, "no precision report line in serve output"
+        resident, quantized = int(m.group(1)), int(m.group(2))
+        assert quantized > 0, (
+            "pressure run quantized nothing — the precision rung never "
+            "engaged")
+
+        # restart from the snapshot: int8 entries come back int8 and the
+        # warm run serves against them without errors
+        out2 = _serve(store_dir, spill_dir)
+        assert "warm start: reloaded" in out2, "second launch did not warm-start"
+        m2 = re.search(PRECISION_RE, out2)
+        assert m2 and int(m2.group(1)) > 0, (
+            "restarted store lost its quantized residents")
+
+        # the compacted final snapshot loads cleanly and its quantized
+        # payloads reconstruct inside the blockwise envelope
+        from repro.core.quant import dequantize_tree
+        from repro.serve.kv_cache import SegmentStore
+
+        store = SegmentStore.load(store_dir)
+        assert len(store) > 0, "final snapshot is empty"
+        assert store.swept_stranded == 0, (
+            f"compacted snapshot left {store.swept_stranded} stranded files")
+        checked = 0
+        for seg in store._segs.values():
+            if seg.precision != "int8" or seg.caches is None:
+                continue
+            import jax
+
+            back = dequantize_tree(seg.caches, seg.quant)
+            bound = 127.0 * max(float(np.asarray(s).max())
+                                for s in seg.quant.scales.values())
+            for x in map(np.asarray, jax.tree.leaves(back)):
+                assert np.all(np.isfinite(x)), "non-finite dequantized value"
+                assert float(np.abs(x).max()) <= bound + 1e-6, (
+                    "dequantized payload escaped its scale envelope")
+            checked += 1
+        assert checked > 0, "snapshot reloaded no quantized segments"
+        print(f"quant_smoke: OK — {quantized} quantize events, {resident} "
+              f"int8 resident, snapshot reloads {len(store)} segments "
+              f"({checked} quantized) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,7 +1,11 @@
 #!/usr/bin/env bash
 # Fast test lane: everything except the @pytest.mark.slow subprocess/e2e
 # tests (multipod spawns an 8-device training subprocess; the arch smoke
-# matrix compiles every architecture).  Full suite remains the tier-1 gate:
+# matrix compiles every architecture; the compression-heavy quant-store
+# snapshot + LM fingerprint tests run full generation loops).  The quant
+# unit suites (test_quant.py, test_quant_store.py, test_cost_* precision
+# cases) are fast-lane by construction.  Full suite remains the tier-1
+# gate:
 #   PYTHONPATH=src python -m pytest -x -q
 set -euo pipefail
 cd "$(dirname "$0")/.."

@@ -15,6 +15,7 @@ Run from the repo root:  PYTHONPATH=src python scripts/tiered_smoke.py
 """
 from __future__ import annotations
 
+import os
 import re
 import subprocess
 import sys
@@ -28,6 +29,11 @@ def main() -> int:
     with tempfile.TemporaryDirectory() as d:
         store_dir = Path(d) / "kvstore"
         spill_dir = Path(d) / "kvspill"
+        # precision pinned fp32: this smoke gates the PR 6 demote/promote
+        # traffic, and under "auto" the precision rung can absorb the byte
+        # pressure by shrinking segments in place (promotions -> 0).  The
+        # quantized path has its own gate in scripts/quant_smoke.py.
+        env = {**os.environ, "REPRO_SEGMENT_PRECISION": "fp32"}
         cmd = [
             sys.executable, "-m", "repro.launch.serve",
             "--arch", "deepseek-67b", "--reduced",
@@ -39,7 +45,7 @@ def main() -> int:
             "--store-dir", str(store_dir),
             "--snapshot-every", "1", "--compact-final",
         ]
-        proc = subprocess.run(cmd, capture_output=True, text=True)
+        proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
         sys.stdout.write(proc.stdout)
         sys.stderr.write(proc.stderr)
         assert proc.returncode == 0, f"serve exited {proc.returncode}"

@@ -55,6 +55,17 @@ class CostModel:
     d2h_bytes_per_s: float = 8e9      # device -> host demote bandwidth
     disk_bytes_per_s: float = 5e8     # spill-file read/write bandwidth
     disk_fixed_s: float = 5e-4        # per-spill-file open/seek latency
+    # segment precision (int8 residency): quantize/dequantize are one
+    # streaming pass over the payload each, priced as bandwidth like the
+    # tier transfers above.  ``int8_bytes_ratio`` is the resident-size
+    # ratio of a quantized segment (int8 payload + fp32 per-block scales
+    # + lossless state leaves ≈ 0.27 of fp32); ``fp32_pin_reuses`` is the
+    # hotness bar above which a segment's stream fidelity outweighs its
+    # bytes and it stays pinned at full precision.
+    quant_bytes_per_s: float = 2e10   # fused (de)quant kernel bandwidth
+    dequant_bytes_per_s: float = 2e10
+    int8_bytes_ratio: float = 0.27
+    fp32_pin_reuses: float = 4.0
 
     def fetch_points(self, n: int) -> float:
         if n <= 0:
@@ -195,6 +206,43 @@ class CostModel:
             if c < best_cost:
                 best, best_cost = tier, c
         return best
+
+    # -- segment precision -------------------------------------------------
+    def quantize_s(self, nbytes: int) -> float:
+        """Seconds to quantize an ``nbytes`` fp32 payload to int8 — one
+        streaming pass (read fp32, write int8 + scales)."""
+        return nbytes / self.quant_bytes_per_s
+
+    def dequantize_s(self, nbytes: int) -> float:
+        """Seconds one future hit pays to reconstruct model precision
+        from the int8 payload on the reuse path (the fused kernel's
+        single pass over the *original* fp32 extent)."""
+        return nbytes / self.dequant_bytes_per_s
+
+    def precision_action(self, n: int, nbytes: int, *,
+                         expected_reuses: Optional[float] = None,
+                         pressured: bool = True) -> str:
+        """Arbitrate one segment's storage precision: ``"fp32"`` or
+        ``"int8"`` — the precision analogue of :meth:`demotion_action`.
+
+        Quantizing trades a one-time quantize pass plus a per-hit dequant
+        pass against the retention the freed bytes buy: at a fixed
+        budget, the ~``1 - int8_bytes_ratio`` of the segment's bytes
+        released keep comparable segments resident that would otherwise
+        rebuild at ``F(n)`` per expected hit (benefit-per-byte is the
+        eviction currency, so freed bytes convert to avoided rebuilds at
+        the same rate).  Hot segments — ``expected_reuses`` at or above
+        ``fp32_pin_reuses`` — stay fp32 while the store is *not*
+        pressured, keeping the high-traffic set bit-exact; under
+        pressure (the demotion path) even hot segments are priced, since
+        the alternative on the table is losing the bytes entirely.
+        """
+        exp = self.expected_reuses if expected_reuses is None else expected_reuses
+        if exp >= self.fp32_pin_reuses and not pressured:
+            return "fp32"
+        roundtrip = self.quantize_s(nbytes) + exp * self.dequantize_s(nbytes)
+        saved = exp * self.recompute_s(n) * (1.0 - self.int8_bytes_ratio)
+        return "int8" if roundtrip < saved else "fp32"
 
 
 def serve_cost_model(*, prefill_s_per_token: float = 1e-4,

@@ -1,0 +1,164 @@
+"""Blockwise symmetric int8 quantization for stored cache pytrees.
+
+The precision dimension of segment residency: benefit-per-byte already
+governs eviction and demotion, so shrinking a segment ~4× multiplies its
+effective retention benefit at a fixed budget (PAPER.md's
+storage-vs-recomputation trade, applied to the *format* of what is
+materialized — F-IVM's move).  This module generalizes
+``distributed/compression.py``'s per-tensor int8 (gradient all-reduce)
+to per-block scales over cache trees:
+
+  * only floating SEQ leaves quantize — running-state (``conv``/``ssm``)
+    and constant leaves are tiny and stay lossless;
+  * a scale block is one seq-bucket chunk × head (``(d0, d1, chunk,
+    head)``; headless low-rank leaves like MLA's ``c_kv`` scale per
+    chunk), so one outlier position cannot flatten a whole layer's
+    dynamic range;
+  * scales are symmetric — ``q = round(x / (max|x| / 127))`` — and
+    zero-safe: an all-zero block gets scale ``1/127``, round-trips
+    exactly, and never divides by zero.
+
+Reconstruction error is bounded by ``scale/2`` elementwise (the rounding
+half-step; clipping never engages because the scale is derived from the
+block max).  The dequant side routes through ``kernels/quant_kv`` — the
+fused Pallas kernel on TPU, a blocked jnp reference elsewhere.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import CACHE_SEQ_KEYS, cache_leaf_key
+
+#: store-level precision settings: "auto" lets the cost model arbitrate
+#: per segment, "fp32" pins everything lossless (bit-identical to the
+#: pre-precision store), "int8" quantizes every admitted segment
+PRECISIONS = ("auto", "fp32", "int8")
+
+
+def resolve_precision(precision: Optional[str]) -> str:
+    """Constructor-time resolution: explicit kwarg wins, then the
+    ``REPRO_SEGMENT_PRECISION`` env override, then ``"auto"``."""
+    if precision is None:
+        precision = os.environ.get("REPRO_SEGMENT_PRECISION", "auto")
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown segment precision {precision!r}; "
+                         f"expected one of {PRECISIONS}")
+    return precision
+
+
+@dataclass
+class QuantMeta:
+    """Sidecar for a quantized cache tree: which flat leaves are int8,
+    their per-block scales, and the dtypes to restore on dequant.
+    Keys are flat leaf indices (as strings, so the mapping survives a
+    JSON round-trip through manifest records unchanged)."""
+    block: int
+    scales: dict[str, Any]    # flat leaf index -> fp32 scale array
+    dtypes: dict[str, str]    # flat leaf index -> original dtype name
+
+    def nbytes(self) -> int:
+        """Scale-array overhead — counted into the segment's resident
+        bytes so budgets price the whole quantized payload."""
+        return sum(s.nbytes for s in self.scales.values())
+
+    def to_host(self) -> None:
+        self.scales = {k: np.asarray(s) for k, s in self.scales.items()}
+
+    def manifest(self) -> dict:
+        """JSON-serializable part (scales travel as npz arrays)."""
+        return {"block": self.block, "dtypes": dict(self.dtypes)}
+
+
+def quantize_leaf(x, block: int):
+    """One SEQ leaf → ``(q int8, scales fp32)``.
+
+    ``x`` carries the document axis at 2; the seq extent is chunked into
+    ``block``-row groups (padded up to the chunk grid — stored segments
+    are bucket-padded, so in practice the grid divides exactly).  Rank-5+
+    leaves ``(d0, d1, seq, heads, ...)`` get one scale per (d0, d1,
+    chunk, head); lower ranks one per (d0, d1, chunk).
+    """
+    xf = jnp.asarray(x).astype(jnp.float32)
+    s = xf.shape[2]
+    nb = max(1, -(-s // block))
+    padded = nb * block
+    if padded != s:
+        pads = [(0, 0)] * xf.ndim
+        pads[2] = (0, padded - s)
+        xf = jnp.pad(xf, pads)
+    pre, post = xf.shape[:2], xf.shape[3:]
+    xr = xf.reshape(pre + (nb, block) + post)
+    per_head = len(post) >= 2
+    if per_head:
+        # reduce the within-chunk axis and everything past the head axis
+        red = (3,) + tuple(range(5, xr.ndim))
+        expand = (3,) + tuple(range(5, xr.ndim))
+    else:
+        red = tuple(range(3, xr.ndim))
+        expand = tuple(range(3, xr.ndim))
+    amax = jnp.max(jnp.abs(xr), axis=red)
+    # zero-safe symmetric scale: an all-zero block quantizes to zeros and
+    # reconstructs exactly instead of dividing by zero
+    scale = jnp.where(amax > 0, amax, 1.0) / 127.0
+    sexp = jnp.expand_dims(scale, expand)
+    q = jnp.clip(jnp.round(xr / sexp), -127, 127).astype(jnp.int8)
+    q = q.reshape(pre + (padded,) + post)
+    if padded != s:
+        q = q[:, :, :s]
+    return q, scale
+
+
+def dequantize_leaf(q, scale, *, block: int, dtype, mode: str | None = None):
+    """Inverse of :func:`quantize_leaf`, routed through the kernel layer."""
+    from repro.kernels.quant_kv import ops
+
+    return ops.dequantize_leaf(q, scale, block=block, dtype=dtype, mode=mode)
+
+
+def _quantizable(path, x) -> bool:
+    return (cache_leaf_key(path) in CACHE_SEQ_KEYS
+            and getattr(x, "ndim", 0) >= 3
+            and jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating))
+
+
+def quantize_tree(caches, *, block: int):
+    """Quantize a stored cache tree → ``(qtree, QuantMeta)``.
+
+    Floating SEQ leaves become int8 in place (same tree structure, so
+    every shape-indexed consumer — flatten specs, bucket capacities —
+    sees the layout it expects); state/constant leaves pass through
+    untouched and are absent from the meta.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    leaves, scales, dtypes = [], {}, {}
+    for j, (path, x) in enumerate(flat):
+        if _quantizable(path, x):
+            q, s = quantize_leaf(x, block)
+            leaves.append(q)
+            scales[str(j)] = s
+            dtypes[str(j)] = jnp.dtype(jnp.asarray(x).dtype).name
+        else:
+            leaves.append(x)
+    return (jax.tree_util.tree_unflatten(treedef, leaves),
+            QuantMeta(block=block, scales=scales, dtypes=dtypes))
+
+
+def dequantize_tree(qtree, meta: QuantMeta, *, mode: str | None = None):
+    """Reconstruct model-precision caches from a quantized tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(qtree)
+    out = []
+    for j, x in enumerate(leaves):
+        k = str(j)
+        if k in meta.scales:
+            out.append(dequantize_leaf(x, jnp.asarray(meta.scales[k]),
+                                       block=meta.block,
+                                       dtype=meta.dtypes[k], mode=mode))
+        else:
+            out.append(x)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -56,8 +56,17 @@ TIER_POLICIES = ("tiered", "evict")
 #: manifest filename shared by every persistent store
 MANIFEST_NAME = "MANIFEST.json"
 
-#: manifest schema version ("models" lists of version 1 became "entries")
-MANIFEST_VERSION = 2
+#: manifest schema version ("models" lists of version 1 became "entries";
+#: version 3 added per-entry payload precision — int8 entries carry a
+#: "precision"/"quant" record and qscale_* arrays, and their npz files
+#: are deflate-compressed)
+MANIFEST_VERSION = 3
+
+#: manifest versions :meth:`PinnedStore.load` accepts.  Version 2
+#: snapshots predate segment precision: their records simply lack the
+#: "precision" key and every consumer defaults it to "fp32", so they
+#: reload unchanged.
+COMPAT_MANIFEST_VERSIONS = (2, 3)
 
 
 def flatten_tree(tree):
@@ -530,7 +539,12 @@ class PinnedStore:
                         record = None  # source vanished: serialize fresh
                 if record is None:
                     arrays, record = self._serialize_entry(item.entry)
-                    np.savez(fpath, **arrays)
+                    # int8 payloads deflate well (and are off the serve
+                    # latency path); fp32 entries keep the cheap raw write
+                    if record.get("precision") == "int8":
+                        np.savez_compressed(fpath, **arrays)
+                    else:
+                        np.savez(fpath, **arrays)
                     record["sha256"] = hashlib.sha256(
                         fpath.read_bytes()).hexdigest()
                     written += 1
@@ -724,11 +738,11 @@ class PinnedStore:
         cls._recover_interrupted_swap(root)
         manifest = json.loads((root / MANIFEST_NAME).read_text())
         version = manifest.get("version")
-        if version != MANIFEST_VERSION:
+        if version not in COMPAT_MANIFEST_VERSIONS:
             raise IOError(
                 f"unsupported store manifest version {version!r} at {root} "
-                f"(expected {MANIFEST_VERSION}); re-save the store with the "
-                f"current code")
+                f"(expected one of {COMPAT_MANIFEST_VERSIONS}); re-save the "
+                f"store with the current code")
         store = cls(**ctor_kwargs)
         known = {rec["file"] for rec in manifest["entries"]}
         for stray in sorted(root.glob("entry_*.npz")):

@@ -24,7 +24,14 @@ import jax.numpy as jnp
 def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Per-tensor symmetric int8. Returns (q int8, scale f32)."""
     xf = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    amax = jnp.max(jnp.abs(xf))
+    # zero-safe: an all-zero (or denormal-tiny) tensor must round-trip to
+    # exact zeros.  The old 1e-12 floor made q = round(x / 7.9e-15) blow
+    # past ±127 for tensors whose max magnitude sat *below* the floor,
+    # clipping every element and dequantizing to floor-scale garbage —
+    # deriving the scale from amax itself keeps |x - deq| <= scale/2
+    # unconditionally (clipping never engages).
+    scale = jnp.where(amax > 0, amax, 1.0) / 127.0
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
     return q, scale
 

@@ -33,6 +33,24 @@ def extend_kernel_mode() -> str:
     return "kernel" if jax.default_backend() == "tpu" else "jax"
 
 
+def quant_kernel_mode() -> str:
+    """How quantized segments dequantize on reuse: 'kernel' | 'ref'.
+
+    'kernel' routes through ``kernels/quant_kv``'s fused Pallas dequant
+    (interpret mode off-TPU), 'ref' the pure-jnp blocked reference —
+    which on CPU is the fast path (XLA fuses the cast+scale), so the
+    default mirrors ``extend_kernel_mode``: kernel on TPU, reference
+    elsewhere.  ``REPRO_QUANT_KERNEL=1/0`` overrides (1 on CPU runs the
+    kernel in interpret mode — the parity harness).
+    """
+    env = os.environ.get("REPRO_QUANT_KERNEL", "auto").strip().lower()
+    if env in ("1", "on", "true", "kernel"):
+        return "kernel"
+    if env in ("0", "off", "false", "ref", "jax"):
+        return "ref"
+    return "kernel" if jax.default_backend() == "tpu" else "ref"
+
+
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 

@@ -1,0 +1,3 @@
+from repro.kernels.quant_kv.ops import dequantize_blocks, dequantize_leaf
+
+__all__ = ["dequantize_blocks", "dequantize_leaf"]

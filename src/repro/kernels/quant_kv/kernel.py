@@ -1,0 +1,55 @@
+"""Fused block dequantization for quantized KV segments (Pallas/TPU).
+
+The reuse path feeds stored segments into the jitted ``insert_cache``;
+when a segment is int8-resident its payload must come back to model
+precision first.  Naively that is two HBM round-trips (cast, then
+scale).  This kernel fuses them: one grid step streams one scale block
+through VMEM, multiplying by its per-block symmetric scale as it
+converts — int8 in, fp32 out, one pass over the bytes.
+
+Layout mirrors ``extend_attention``: one grid step per independent
+stream (here: one scale block — a seq-bucket chunk × head), block
+values tiled into VMEM via ``BlockSpec``, and the per-block scales ride
+in SMEM via scalar prefetch so a single compiled executable serves
+every segment of a given bucket shape — only the scale values move
+between calls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(s_ref, q_ref, o_ref):
+    i = pl.program_id(0)
+    o_ref[0] = q_ref[0].astype(jnp.float32) * s_ref[i]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequant_blocks_streams(q, scales, *, interpret: bool = False):
+    """Per-block fused dequant.  ``q (G, rows, cols)`` int8; ``scales (G,)``.
+
+    Returns fp32 ``(G, rows, cols)``.  ``rows`` is the seq-bucket chunk
+    and ``cols`` the trailing feature extent, so a block is a few tens of
+    KB in VMEM regardless of segment length — segment size only moves
+    the grid.
+    """
+    g, rows, cols = q.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                    # scales ride in SMEM
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, rows, cols), lambda i, s: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, cols), lambda i, s: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, rows, cols), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(scales, jnp.float32), q)

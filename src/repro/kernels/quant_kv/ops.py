@@ -1,0 +1,81 @@
+"""Layout + routing for the quantized-KV dequant kernel.
+
+``dequantize_leaf`` turns one int8 cache leaf (document axis at 2,
+bucketed layout — the stored-segment invariant) back into model
+precision.  All the transpose/reshape work to reach the kernel's
+canonical ``(G, rows, cols)`` block layout lives here, mirroring how
+``extend_attention.ops`` owns the stream layout and the kernel owns
+only the arithmetic:
+
+  * rank ≥ 5 leaves ``(layers, batch, seq, heads, ...)`` carry one
+    scale per (layers, batch, seq-chunk, head) — the tentpole's
+    "seq bucket chunk × head" block;
+  * rank ≤ 4 leaves (e.g. MLA's fused ``c_kv`` latent) have no head
+    axis and carry one scale per (layers, batch, seq-chunk).
+
+Routing follows ``extend_attention``: Pallas kernel on TPU, pure-jnp
+blocked reference elsewhere; ``REPRO_QUANT_KERNEL=1`` forces the kernel
+in interpret mode (the parity harness), ``=0`` forces the reference.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.kernels.common import quant_kernel_mode, use_interpret
+from repro.kernels.quant_kv.kernel import dequant_blocks_streams
+from repro.kernels.quant_kv.ref import dequant_blocks_ref
+
+
+def dequantize_blocks(q, scales, *, mode: str | None = None):
+    """``q (G, rows, cols)`` int8 × ``scales (G,)`` → fp32, routed."""
+    if mode is None:
+        mode = quant_kernel_mode()
+    if mode == "kernel":
+        return dequant_blocks_streams(q, scales, interpret=use_interpret())
+    return dequant_blocks_ref(jnp.asarray(q), jnp.asarray(scales))
+
+
+def dequantize_leaf(q, scale, *, block: int, dtype, mode: str | None = None):
+    """Dequantize one stored int8 cache leaf back to ``dtype``.
+
+    ``q`` has the document axis at 2; ``scale`` is the per-block scale
+    tree ``quantize_leaf`` produced: ``(d0, d1, nb[, heads])`` for ``nb``
+    seq chunks of ``block`` rows.  Rows past ``nb·block`` never exist
+    (quantization padded to the chunk grid and the slice below removes
+    the pad), so the output is exactly ``q``'s shape.
+    """
+    x = jnp.asarray(q)
+    s = x.shape[2]
+    nb = scale.shape[2]
+    padded = nb * block
+    if padded != s:
+        pads = [(0, 0)] * x.ndim
+        pads[2] = (0, padded - s)
+        x = jnp.pad(x, pads)
+    pre, post = x.shape[:2], x.shape[3:]
+    xr = x.reshape(pre + (nb, block) + post)
+    per_head = len(post) >= 2
+    if per_head:
+        # (d0, d1, nb, block, H, ...) -> (d0, d1, nb, H, block, ...): the
+        # head axis joins the block-index axes so each (chunk, head) block
+        # is one contiguous kernel stream.  The permutation swaps axes
+        # 3 and 4, so it is its own inverse.
+        perm = (0, 1, 2, 4, 3) + tuple(range(5, xr.ndim))
+        xt = xr.transpose(perm)
+        g = math.prod(pre) * nb * post[0]
+        cols = math.prod(post[1:])
+        out = dequantize_blocks(xt.reshape(g, block, cols),
+                                scale.reshape(g), mode=mode)
+        out = out.reshape(xt.shape).transpose(perm)
+    else:
+        g = math.prod(pre) * nb
+        cols = math.prod(post) if post else 1
+        out = dequantize_blocks(xr.reshape(g, block, cols),
+                                scale.reshape(g), mode=mode)
+        out = out.reshape(xr.shape)
+    out = out.reshape(pre + (padded,) + post)
+    if padded != s:
+        out = out[:, :, :s]
+    return out.astype(dtype)

@@ -1,0 +1,17 @@
+"""Reference blocked dequantization — the off-TPU fallback and the
+oracle the kernel parity tests compare against.
+
+Operates on the same canonical layout as the Pallas kernel: ``q`` holds
+``G`` independent scale blocks of shape ``(rows, cols)`` stacked along
+axis 0, ``scales`` one fp32 multiplier per block.  Pure jnp, so XLA
+fuses the cast and scale into one pass — on CPU this *is* the fast
+path, not a debugging aid.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant_blocks_ref(q, scales):
+    """``q (G, rows, cols)`` int8 × ``scales (G,)`` → fp32 ``(G, rows, cols)``."""
+    return q.astype(jnp.float32) * scales.astype(jnp.float32)[:, None, None]

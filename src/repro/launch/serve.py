@@ -43,8 +43,9 @@ import numpy as np
 
 
 def _tier_kwargs(args) -> dict:
-    """Residency-tier configuration from the command line (empty = legacy
-    single-tier store, byte-for-byte the pre-tier behavior)."""
+    """Residency-tier / precision configuration from the command line
+    (empty = legacy single-tier fp32-pinned-by-default store, byte-for-
+    byte the pre-tier behavior)."""
     kw = {}
     if args.host_budget > 0:
         kw["host_budget"] = args.host_budget
@@ -52,6 +53,8 @@ def _tier_kwargs(args) -> dict:
         kw["spill_dir"] = args.spill_dir
     if args.tier_policy:
         kw["tier_policy"] = args.tier_policy
+    if args.segment_precision:
+        kw["precision"] = args.segment_precision
     return kw
 
 
@@ -133,6 +136,10 @@ def _print_tier_report(store, args) -> None:
           f"demotions {sum(store.demotions.values())} "
           f"(host {store.demotions['host']}, disk {store.demotions['disk']}), "
           f"prefetches {store.prefetches}, spill writes {store.spill_writes}")
+    print(f"  precision ({store.precision} policy): "
+          f"{store.quantized_segments()} int8 segments resident, "
+          f"{store.quantized} quantized, "
+          f"{store.quant_bytes_saved/1e6:.1f} MB saved")
     if args.store_dir:
         w = store.writer
         print(f"  background saves: {store.bg_saves} completed, "
@@ -315,6 +322,15 @@ def main() -> None:
                          "the residency tiers (default) or legacy "
                          "evict-only drops (default honors "
                          "REPRO_TIER_POLICY)")
+    ap.add_argument("--segment-precision", choices=["auto", "fp32", "int8"],
+                    default=None,
+                    help="stored-segment precision: 'auto' lets the cost "
+                         "model quantize long-tail segments to blockwise "
+                         "int8 under pressure (engaged with the tier "
+                         "ladder), 'fp32' pins everything lossless (the "
+                         "pre-precision behavior, also via "
+                         "REPRO_SEGMENT_PRECISION=fp32), 'int8' quantizes "
+                         "every admitted segment")
     ap.add_argument("--background-saves", dest="background_saves",
                     action="store_true", default=True,
                     help="run --snapshot-every saves on the background "

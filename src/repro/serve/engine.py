@@ -142,11 +142,31 @@ class PrefixCacheBuilder:
         # below are compiled O(#buckets) times, not O(#chunks)
         self.lowerings = {"prefill": 0, "extend": 0, "extend_many": 0,
                           "insert": 0}
+        #: segments dequantized on the reuse path (int8 residents whose
+        #: payload was reconstructed before entering the jitted insert)
+        self.dequants = 0
         self._jit_prefill = jax.jit(self._counted(model.prefill, "prefill"))
         self._jit_extend = jax.jit(self._counted(model.prefill_extend, "extend"))
         self._jit_extend_many = jax.jit(
             self._counted(model.prefill_extend_many, "extend_many"))
         self._jit_insert = jax.jit(self._counted(insert_cache, "insert"))
+
+    def _segment_caches(self, seg):
+        """A reuse segment's caches at model precision.
+
+        int8 residents reconstruct through the fused dequant kernel
+        (``kernels/quant_kv``; blocked jnp reference off-TPU) before the
+        jitted ``insert_cache`` consumes them — ``insert_cache`` casts
+        the segment to the destination dtype, so feeding it raw int8
+        codes would silently insert garbage magnitudes.  The store copy
+        stays quantized; only this plan's working cache pays fp32 bytes.
+        """
+        if seg.precision != "int8" or seg.quant is None:
+            return seg.caches
+        from repro.core.quant import dequantize_tree
+
+        self.dequants += 1
+        return dequantize_tree(seg.caches, seg.quant)
 
     def _counted(self, fn, key: str):
         """Wrap ``fn`` so each jit trace (= one XLA lowering) is counted.
@@ -249,15 +269,16 @@ class PrefixCacheBuilder:
                 for st in steps:
                     if st.model_id is not None:
                         seg = self.store.get(st.model_id, requester=requester)
+                        seg_caches = self._segment_caches(seg)
                         if caches is None:
                             # plan anchor at 0: adopt the segment (incl. its
                             # state leaves) and grow to the request capacity
-                            caches = pad_cache_to(seg.caches, cap)
+                            caches = pad_cache_to(seg_caches, cap)
                         else:
                             # shape-stable insert: one executable per (cache
                             # bucket, segment bucket) pair, not per valid length
                             caches = self._jit_insert(
-                                caches, seg.caches, jnp.asarray(st.rng.lo, jnp.int32))
+                                caches, seg_caches, jnp.asarray(st.rng.lo, jnp.int32))
                         stats.tokens_reused += st.rng.size
                     else:
                         caches = self._fill_gap(doc, st.rng, caches, cap, extras,

@@ -72,6 +72,7 @@ import numpy as np
 
 from repro.core.cost import CostModel, serve_cost_model
 from repro.core.descriptors import DescriptorIndex, Range
+from repro.core.quant import QuantMeta, quantize_tree, resolve_precision
 from repro.core.store import (TIER_POLICIES, BackgroundWriter, PinnedStore,
                               _link_or_copy, flatten_tree, unflatten_tree)
 # the model layer owns the cache-leaf taxonomy (it creates the entries);
@@ -238,6 +239,12 @@ class StoredSegment:
     #: spill payload whose background write has not landed yet; promotions
     #: and snapshots read this write-through copy until the worker clears it
     pending_arrays: Optional[dict] = field(default=None, repr=False)
+    #: storage precision of the resident payload: "fp32" (lossless, the
+    #: model's own dtypes) or "int8" (blockwise symmetric quantization;
+    #: SEQ leaves are int8 and ``quant`` holds the per-block scales)
+    precision: str = "fp32"
+    #: per-block scale sidecar when ``precision == "int8"``
+    quant: Optional[QuantMeta] = field(default=None, repr=False)
 
     def __post_init__(self):
         if not self.valid:
@@ -254,7 +261,10 @@ class StoredSegment:
         # so the figure survives demotion, when the tree leaves device
         # memory or the entry altogether.  This is the *padded* residency —
         # what the byte budget actually pays — not the valid slice.
-        return cache_nbytes(self.caches)
+        # Quantized entries count their scale sidecar too: the budget
+        # prices everything the payload keeps resident.
+        return cache_nbytes(self.caches) + \
+            (self.quant.nbytes() if self.quant is not None else 0)
 
     def doc_ids(self) -> set:
         return {self.doc_id} | self.aliases
@@ -281,6 +291,7 @@ class SegmentStore(PinnedStore):
                  host_budget: Optional[int] = None,
                  spill_dir: Optional[str | Path] = None,
                  tier_policy: Optional[str] = None,
+                 precision: Optional[str] = None,
                  writer: Optional[BackgroundWriter] = None) -> None:
         # a serving store's default calibration is the serving one — a
         # standalone-constructed store (e.g. SegmentStore.load at process
@@ -327,6 +338,14 @@ class SegmentStore(PinnedStore):
             raise ValueError(f"unknown tier policy {tier_policy!r}; "
                              f"expected one of {TIER_POLICIES}")
         self.tier_policy = tier_policy
+        # segment precision: "fp32" pins everything lossless (bit-for-byte
+        # the pre-precision store), "int8" quantizes every admitted
+        # segment, "auto" (default) lets the cost model arbitrate per
+        # segment — engaged by the same ladder as tier demotion, so a
+        # store with neither tiers nor a forced setting stays lossless
+        self.precision = resolve_precision(precision)
+        self.quantized = 0
+        self.quant_bytes_saved = 0
         self.demotions = {"host": 0, "disk": 0}
         self.promotions = {"host": 0, "disk": 0}
         self.demoted_bytes = 0
@@ -394,9 +413,13 @@ class SegmentStore(PinnedStore):
         old = self._segs.get(seg_id)
         if old is not None:
             self._drop_spill(old)
-        self._segs[seg_id] = StoredSegment(seg_id, rng, caches, doc_id=doc_id,
-                                           valid=rng.size,
-                                           created_by=created_by)
+        seg = StoredSegment(seg_id, rng, caches, doc_id=doc_id,
+                            valid=rng.size, created_by=created_by)
+        self._segs[seg_id] = seg
+        if self.precision == "int8":
+            # forced quantization: every admitted segment compresses at
+            # the door (the "auto" ladder instead quantizes on pressure)
+            self._quantize_seg(seg)
         self.index(doc_id).add(seg_id, rng)
         self._doc_stats.setdefault(doc_id, [0, 0])[0] += 1
         self._maybe_evict()
@@ -526,6 +549,10 @@ class SegmentStore(PinnedStore):
         return sum(s.nbytes for s in self._segs.values()
                    if s.tier == "device")
 
+    def quantized_segments(self) -> int:
+        """Currently-resident int8 entries (``quantized`` counts events)."""
+        return sum(1 for s in self._segs.values() if s.precision == "int8")
+
     def host_nbytes(self) -> int:
         return sum(s.nbytes for s in self._segs.values() if s.tier == "host")
 
@@ -581,8 +608,47 @@ class SegmentStore(PinnedStore):
             tiers.append("disk")
         return tuple(tiers)
 
+    def _quantize_seg(self, seg: StoredSegment) -> bool:
+        """Re-encode a device-resident fp32 segment as blockwise int8.
+
+        In-place precision demotion: same tree structure and bucketed
+        shapes (every shape-indexed consumer is untouched), ~4× fewer
+        resident bytes, per-block scales riding on ``seg.quant``.  Any
+        cached snapshot record or spill file holds the fp32 payload and
+        is invalidated — the quantized entry re-serializes on the next
+        save.  Returns False when there is nothing to quantize (already
+        int8, demoted, or no floating SEQ leaves).
+        """
+        if seg.precision != "fp32" or seg.caches is None \
+                or seg.tier != "device":
+            return False
+        qtree, meta = quantize_tree(seg.caches, block=self.seq_bucket)
+        if not meta.scales:
+            return False
+        old_nbytes = seg.nbytes
+        seg.caches = qtree
+        seg.quant = meta
+        seg.precision = "int8"
+        seg.__dict__["nbytes"] = cache_nbytes(qtree) + meta.nbytes()
+        self.quantized += 1
+        self.quant_bytes_saved += max(old_nbytes - seg.nbytes, 0)
+        self._invalidate_record(seg.seg_id)
+        self._drop_spill(seg)
+        return True
+
     def _relegate(self, victim: StoredSegment) -> bool:
         tiers = self._demotion_tiers()
+        if tiers and self.precision == "auto" and victim.precision == "fp32":
+            # precision is the rung *above* host: before paying a d2h
+            # copy (or dropping), try shrinking the victim in place.
+            # pressured=False keeps the hot-set pin — high-prior segments
+            # hold their bit-exact fp32 payload and take the tier ladder
+            prior = self.admission_prior(victim.doc_id)
+            if self.cost.precision_action(
+                    victim.valid, victim.nbytes, expected_reuses=prior,
+                    pressured=False) == "int8" \
+                    and self._quantize_seg(victim):
+                return True
         action = "drop"
         if tiers:
             action = self.cost.demotion_action(
@@ -615,6 +681,17 @@ class SegmentStore(PinnedStore):
                 self.evictions += 1
 
     def _demote(self, seg: StoredSegment, tier: str) -> None:
+        if seg.tier == "device" and self.precision == "auto" \
+                and seg.precision == "fp32":
+            # compress on the way out: a segment leaving the device lost
+            # the residency competition, so its bytes matter more than
+            # its fidelity — pressured=True overrides the hot-set pin and
+            # the cost model prices quantize+dequant against the rebuild
+            # the freed lower-tier bytes avoid
+            if self.cost.precision_action(
+                    seg.valid, seg.nbytes, pressured=True,
+                    expected_reuses=self.admission_prior(seg.doc_id)) == "int8":
+                self._quantize_seg(seg)
         nb = seg.nbytes
         if tier == "disk" and seg.spill is not None \
                 and (seg.spill.get("sha256") or seg.pending_arrays is not None):
@@ -631,6 +708,8 @@ class SegmentStore(PinnedStore):
                     if start is not None:
                         start()
                 seg.caches = jax.tree.map(np.asarray, seg.caches)
+                if seg.quant is not None:
+                    seg.quant.to_host()
                 seg.tier = "host"
             if tier == "disk":
                 self._spill(seg)
@@ -645,7 +724,7 @@ class SegmentStore(PinnedStore):
     def _segment_record(self, seg: StoredSegment, spec) -> dict:
         """The immutable manifest record — shared by snapshot entries and
         spill files, which is what lets the two hard-link each other."""
-        return {
+        rec = {
             "seg_id": seg.seg_id,
             "lo": seg.rng.lo,
             "hi": seg.rng.hi,
@@ -653,7 +732,21 @@ class SegmentStore(PinnedStore):
             "capacity": seg.capacity,
             "nbytes": seg.nbytes,
             "tree": spec,
+            "precision": seg.precision,
         }
+        if seg.quant is not None:
+            rec["quant"] = seg.quant.manifest()
+        return rec
+
+    @staticmethod
+    def _payload_arrays(leaves, quant: Optional[QuantMeta]) -> dict:
+        """npz contents for one segment: ``leaf_{j}`` payload arrays plus,
+        for quantized entries, their ``qscale_{j}`` scale sidecars."""
+        arrays = {f"leaf_{j}": np.asarray(x) for j, x in enumerate(leaves)}
+        if quant is not None:
+            for k, s in quant.scales.items():
+                arrays[f"qscale_{k}"] = np.asarray(s)
+        return arrays
 
     def _spill(self, seg: StoredSegment) -> None:
         """Move a host-resident payload into a spill file (PR 4 npz entry
@@ -662,17 +755,21 @@ class SegmentStore(PinnedStore):
         snapshots until the worker lands the file and publishes its hash.
         """
         spec, leaves = flatten_tree(seg.caches)
-        arrays = {f"leaf_{j}": np.asarray(x) for j, x in enumerate(leaves)}
+        arrays = self._payload_arrays(leaves, seg.quant)
         record = self._segment_record(seg, spec)
         path = self._spill_path(seg.seg_id)
         spill = {"file": str(path), "record": record, "sha256": None}
         seg.spill = spill
         seg.pending_arrays = arrays
+        # quantized payloads additionally deflate (zlib): int8 KV is far
+        # more compressible than fp32 mantissas, and the cold tiers are
+        # off the latency path, so the CPU trade is the right one there
+        savez = np.savez_compressed if seg.precision == "int8" else np.savez
 
         def _write() -> None:
             tmp = path.with_name(f".{path.name}.tmp-{os.getpid()}")
             with open(tmp, "wb") as f:
-                np.savez(f, **arrays)
+                savez(f, **arrays)
             sha = hashlib.sha256(tmp.read_bytes()).hexdigest()
             os.replace(tmp, path)
             # publish completion only after the file is in place: readers
@@ -687,12 +784,23 @@ class SegmentStore(PinnedStore):
         seg.tier = "disk"
         self.spill_writes += 1
 
-    def _load_spill_arrays(self, seg: StoredSegment) -> list[np.ndarray]:
+    def _load_spill_payload(self, seg: StoredSegment):
+        """Spill contents → (payload leaves, {index: scale}).  Reads the
+        write-through pending copy while the background write is in
+        flight, the landed npz afterwards."""
+
+        def split(src, names):
+            n = sum(1 for k in names if k.startswith("leaf_"))
+            leaves = [src[f"leaf_{j}"] for j in range(n)]
+            scales = {k[len("qscale_"):]: src[k] for k in names
+                      if k.startswith("qscale_")}
+            return leaves, scales
+
         pending = seg.pending_arrays
         if pending is not None:
-            return [pending[f"leaf_{j}"] for j in range(len(pending))]
+            return split(pending, pending)
         with np.load(seg.spill["file"]) as z:
-            return [z[f"leaf_{j}"] for j in range(len(z.files))]
+            return split(z, z.files)
 
     def _drop_spill(self, seg: StoredSegment) -> None:
         sp, seg.spill, seg.pending_arrays = seg.spill, None, None
@@ -742,9 +850,19 @@ class SegmentStore(PinnedStore):
         if src == "device":
             return
         if src == "disk":
-            spec = seg.spill["record"]["tree"]
-            leaves = self._load_spill_arrays(seg)
-            seg.caches = unflatten_tree(spec, leaves, leaf_fn=jnp.asarray)
+            rec = seg.spill["record"]
+            leaves, scales = self._load_spill_payload(seg)
+            seg.caches = unflatten_tree(rec["tree"], leaves,
+                                        leaf_fn=jnp.asarray)
+            if rec.get("precision") == "int8" and seg.quant is None:
+                # a snapshot-reloaded disk entry carries its scales only
+                # in the npz; rebuild the sidecar on first promotion
+                qm = rec.get("quant", {})
+                seg.precision = "int8"
+                seg.quant = QuantMeta(
+                    block=int(qm.get("block", self.seq_bucket)),
+                    scales={k: jnp.asarray(v) for k, v in scales.items()},
+                    dtypes=dict(qm.get("dtypes", {})))
         else:
             seg.caches = jax.tree.map(jnp.asarray, seg.caches)
         seg.tier = "device"
@@ -813,13 +931,15 @@ class SegmentStore(PinnedStore):
             # disk-tier: the payload lives in the spill file (or, mid-
             # write, in the pending arrays); no device round-trip needed
             record = dict(seg.spill["record"])
-            leaves = self._load_spill_arrays(seg)
+            leaves, scales = self._load_spill_payload(seg)
             arrays = {f"leaf_{j}": np.asarray(x)
                       for j, x in enumerate(leaves)}
+            for k, s in scales.items():
+                arrays[f"qscale_{k}"] = np.asarray(s)
             return arrays, record
         spec, leaves = flatten_tree(seg.caches)
-        arrays = {f"leaf_{j}": np.asarray(x) for j, x in enumerate(leaves)}
-        return arrays, self._segment_record(seg, spec)
+        return (self._payload_arrays(leaves, seg.quant),
+                self._segment_record(seg, spec))
 
     def _entry_file_source(self, key: str, entry: StoredSegment):
         src = super()._entry_file_source(key, entry)
@@ -860,7 +980,8 @@ class SegmentStore(PinnedStore):
                                or self._load_src is None):
             tier = "device"
         if tier == "device":
-            leaves = [arrays[f"leaf_{j}"] for j in range(len(arrays.files))]
+            n_leaf = sum(1 for k in arrays.files if k.startswith("leaf_"))
+            leaves = [arrays[f"leaf_{j}"] for j in range(n_leaf)]
             caches = unflatten_tree(rec["tree"], leaves, leaf_fn=jnp.asarray)
             sid = self.put(rng, caches, doc_id=rec["doc_id"],
                            seg_id=rec["seg_id"])
@@ -872,6 +993,7 @@ class SegmentStore(PinnedStore):
         seg = self._segs.get(sid)
         if seg is None:
             return sid
+        self._attach_quant(seg, rec, arrays)
         seg.cross_session_hits = int(rec.get("cross_session_hits", 0))
         for alias_doc in rec.get("aliases", []):
             seg.aliases.add(alias_doc)
@@ -892,8 +1014,8 @@ class SegmentStore(PinnedStore):
                             valid=int(rec["valid"]), tier=tier,
                             capacity=int(rec["capacity"]))
         if tier == "host":
-            leaves = [np.asarray(arrays[f"leaf_{j}"])
-                      for j in range(len(arrays.files))]
+            n_leaf = sum(1 for k in arrays.files if k.startswith("leaf_"))
+            leaves = [np.asarray(arrays[f"leaf_{j}"]) for j in range(n_leaf)]
             seg.caches = unflatten_tree(rec["tree"], leaves)
         else:
             seg.__dict__["nbytes"] = int(rec["nbytes"])
@@ -903,6 +1025,10 @@ class SegmentStore(PinnedStore):
             _link_or_copy(self._load_src, path)
             record = {k: rec[k] for k in ("seg_id", "lo", "hi", "valid",
                                           "capacity", "nbytes", "tree")}
+            record["precision"] = rec.get("precision", "fp32")
+            if "quant" in rec:
+                record["quant"] = rec["quant"]
+            seg.precision = record["precision"]
             seg.spill = {"file": str(path), "record": record,
                          "sha256": rec["sha256"]}
         self._segs[sid] = seg
@@ -910,6 +1036,25 @@ class SegmentStore(PinnedStore):
         self._doc_stats.setdefault(rec["doc_id"], [0, 0])[0] += 1
         self._maybe_evict()
         return sid
+
+    def _attach_quant(self, seg: StoredSegment, rec: dict, arrays) -> None:
+        """Restore the int8 sidecar of a reloaded quantized entry.  Disk
+        entries skip it — their scales stay in the (hard-linked) npz and
+        :meth:`_promote` rebuilds the sidecar on first touch."""
+        if rec.get("precision") != "int8" or seg.tier == "disk" \
+                or seg.precision == "int8" and seg.quant is not None:
+            return
+        qm = rec.get("quant", {})
+        as_leaf = np.asarray if seg.tier == "host" else jnp.asarray
+        scales = {k[len("qscale_"):]: as_leaf(arrays[k])
+                  for k in arrays.files if k.startswith("qscale_")}
+        seg.precision = "int8"
+        seg.quant = QuantMeta(block=int(qm.get("block", self.seq_bucket)),
+                              scales=scales,
+                              dtypes=dict(qm.get("dtypes", {})))
+        if seg.caches is not None:
+            seg.__dict__["nbytes"] = \
+                cache_nbytes(seg.caches) + seg.quant.nbytes()
 
     def _store_meta(self) -> dict:
         return {
@@ -940,6 +1085,7 @@ class SegmentStore(PinnedStore):
              host_budget: Optional[int] = None,
              spill_dir: Optional[str | Path] = None,
              tier_policy: Optional[str] = None,
+             precision: Optional[str] = None,
              writer: Optional[BackgroundWriter] = None,
              verify: bool = True) -> "SegmentStore":
         """Rebuild a serving store from a :meth:`PinnedStore.save` snapshot.
@@ -954,9 +1100,13 @@ class SegmentStore(PinnedStore):
         (their snapshot files linked into ``spill_dir``) until promoted.
         Without tier configuration everything loads to device, exactly
         the pre-tier behaviour.
+
+        ``precision`` is likewise a fresh runtime choice, but it only
+        governs *future* decisions: entries snapshotted as int8 reload
+        as int8 (their fp32 payload is gone), whatever this store pins.
         """
         return super().load(path, verify=verify, byte_budget=byte_budget,
                             cost_model=cost_model, policy=policy,
                             admit_prior=admit_prior, host_budget=host_budget,
                             spill_dir=spill_dir, tier_policy=tier_policy,
-                            writer=writer)
+                            precision=precision, writer=writer)

@@ -718,6 +718,13 @@ class SessionManager:
             "bg_saves": st.bg_saves,
             "bg_save_drops": st.bg_save_drops,
             "save_stall_s": st.save_stall_s,
+            # segment precision: resident int8 entries, cumulative
+            # quantization events / bytes released, and reuse-path
+            # dequant count — plain counters, finite when idle
+            "quantized_segments": st.quantized_segments(),
+            "quantized": st.quantized,
+            "quant_bytes_saved": st.quant_bytes_saved,
+            "dequants": self.builder.dequants,
         }
 
 

@@ -1,0 +1,40 @@
+"""Benchmark record collection (benchmarks/common.py -> BENCH_serve.json).
+
+Record names key the whole perf trajectory — the JSON writer merges by
+name — so ``emit()`` must keep RECORDS name-unique: a benchmark measured
+twice in one process replaces its record instead of appending a stale
+duplicate."""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import common  # noqa: E402
+
+
+@pytest.fixture()
+def records(monkeypatch):
+    fresh: list = []
+    monkeypatch.setattr(common, "RECORDS", fresh)
+    return fresh
+
+
+def test_emit_replaces_same_name_record(records, capsys):
+    common.emit("serve_reuse", 10.0, "hit_rate=0.5")
+    common.emit("serve_reuse", 7.5, "hit_rate=0.9")
+    assert len(records) == 1
+    assert records[0]["us_per_call"] == 7.5
+    assert records[0]["derived"] == {"hit_rate": "0.9"}
+    # the CSV line still prints once per measurement
+    assert capsys.readouterr().out.count("serve_reuse,") == 2
+
+
+def test_emit_appends_distinct_names_in_order(records):
+    common.emit("a", 1.0)
+    common.emit("b", 2.0, "x=1;y=2")
+    common.emit("a", 3.0)
+    assert [r["name"] for r in records] == ["a", "b"]
+    assert records[0]["us_per_call"] == 3.0
+    assert records[1]["derived"] == {"x": "1", "y": "2"}

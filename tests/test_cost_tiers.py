@@ -131,8 +131,12 @@ def test_prior_resets_across_release_and_reput():
 
 def test_release_doc_drops_spill_files(tmp_path):
     nb = StoredSegment("t", Range(0, 8), _seg(8), valid=8).nbytes
+    # fp32 pin: under the default "auto" policy the precision rung would
+    # quantize victims in place and absorb the pressure this test needs
+    # to push segments all the way to disk.
     store = SegmentStore(byte_budget=2 * nb + 1, seq_bucket=8,
-                         host_budget=nb + 1, spill_dir=tmp_path / "spill")
+                         host_budget=nb + 1, spill_dir=tmp_path / "spill",
+                         precision="fp32")
     for i in range(5):
         store.put(Range(8 * i, 8 * i + 8), _seg(8), doc_id="gone")
     store.flush_saves()

@@ -94,6 +94,21 @@ class TestCompression:
             x = x - 0.05 * dequantize_int8(q, s)
         assert float(jnp.linalg.norm(x - x_true)) < 1e-2
 
+    def test_zero_and_subfloor_tensors_roundtrip_exactly(self):
+        """Regression: the old 1e-12 scale floor clipped tensors whose max
+        magnitude sat below the floor into floor-scale garbage.  Zeros
+        must come back as exact zeros with a finite positive scale, and
+        sub-floor values must still obey the scale/2 bound."""
+        q, s = quantize_int8(jnp.zeros(64))
+        assert np.isfinite(float(s)) and float(s) > 0
+        np.testing.assert_array_equal(np.asarray(dequantize_int8(q, s)), 0.0)
+
+        tiny = jnp.asarray(
+            np.random.default_rng(2).standard_normal(64) * 1e-14)
+        q, s = quantize_int8(tiny)
+        err = np.abs(np.asarray(dequantize_int8(q, s) - tiny))
+        assert err.max() <= float(s) / 2 + 1e-30
+
     def test_compression_ratio(self):
         g = {"w": jnp.zeros((1024, 1024)), "b": jnp.zeros(1024)}
         assert compressed_bytes(g) < raw_bytes(g) / 3.9

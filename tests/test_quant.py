@@ -1,0 +1,183 @@
+"""Blockwise int8 quantization: round-trip bounds, tree semantics, the
+fused dequant kernel's parity with its reference, and the cost model's
+precision arbitration."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cost import CostModel, serve_cost_model
+from repro.core.quant import (PRECISIONS, dequantize_tree, quantize_leaf,
+                              quantize_tree, resolve_precision)
+from repro.kernels.quant_kv.kernel import dequant_blocks_streams
+from repro.kernels.quant_kv.ops import dequantize_leaf
+from repro.kernels.quant_kv.ref import dequant_blocks_ref
+
+
+def _roundtrip_check(x, block):
+    q, s = quantize_leaf(x, block)
+    assert q.dtype == jnp.int8 and q.shape == x.shape
+    d = dequantize_leaf(q, s, block=block, dtype=jnp.float32)
+    err = np.abs(np.asarray(d) - np.asarray(x, np.float32))
+    # elementwise: every value reconstructs within half a quantization
+    # step of its own block's scale
+    nb = s.shape[2]
+    per_head = x.ndim >= 5
+    for ci in range(nb):
+        lo, hi = ci * block, min((ci + 1) * block, x.shape[2])
+        e = err[:, :, lo:hi]
+        sc = np.asarray(s)[:, :, ci]
+        if per_head:
+            # scale axes (d0, d1, chunk, head); err axes (d0, d1, seq, head, ...)
+            bound = sc.reshape(sc.shape[0], sc.shape[1], 1, sc.shape[2],
+                               *([1] * (e.ndim - 4)))
+        else:
+            bound = sc.reshape(sc.shape[0], sc.shape[1], 1,
+                               *([1] * (e.ndim - 3)))
+        assert np.all(e <= bound / 2 + 1e-7), (x.shape, block, ci)
+
+
+# -- property: quantize -> dequantize error bounded by scale/2 -------------
+
+@given(
+    dims=st.tuples(st.integers(1, 3), st.integers(1, 17),
+                   st.integers(1, 4), st.integers(1, 6)),
+    block=st.sampled_from([1, 4, 8, 16]),
+    mode=st.sampled_from(["normal", "zero", "negative", "mixed_mag"]),
+    rank5=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=30, deadline=None)
+def test_roundtrip_error_bounded(dims, block, mode, rank5, seed):
+    layers, seq, heads, hd = dims
+    shape = (layers, 1, seq, heads, hd) if rank5 else (layers, 1, seq, hd)
+    rng = np.random.default_rng(seed)
+    if mode == "zero":
+        x = np.zeros(shape, np.float32)
+    elif mode == "negative":
+        x = -np.abs(rng.standard_normal(shape)).astype(np.float32) - 0.1
+    elif mode == "mixed_mag":
+        # per-block dynamic ranges differing by orders of magnitude — the
+        # case per-tensor scales (distributed/compression.py) get wrong
+        x = (rng.standard_normal(shape)
+             * np.logspace(-3, 3, seq).reshape((1, 1, seq) + (1,) * (len(shape) - 3))
+             ).astype(np.float32)
+    else:
+        x = rng.standard_normal(shape).astype(np.float32) * 5
+    _roundtrip_check(jnp.asarray(x), block)
+
+
+def test_zero_tensor_roundtrips_exactly_and_finite():
+    q, s = quantize_leaf(jnp.zeros((2, 1, 8, 2, 4)), 4)
+    assert np.all(np.isfinite(np.asarray(s))) and np.all(np.asarray(s) > 0)
+    d = dequantize_leaf(q, s, block=4, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(d), 0.0)
+
+
+def test_bfloat16_leaf_restores_dtype():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((1, 1, 16, 2, 4)),
+                    jnp.bfloat16)
+    q, s = quantize_leaf(x, 8)
+    d = dequantize_leaf(q, s, block=8, dtype=jnp.bfloat16)
+    assert d.dtype == jnp.bfloat16
+    err = np.abs(np.asarray(d, np.float32) - np.asarray(x, np.float32))
+    assert err.max() <= float(np.asarray(s).max())  # half-step + bf16 rounding
+
+
+# -- tree semantics --------------------------------------------------------
+
+def _tree(rng):
+    return [{"k": jnp.asarray(rng.standard_normal((2, 1, 16, 2, 4)), jnp.float32),
+             "v": jnp.asarray(rng.standard_normal((2, 1, 16, 2, 4)), jnp.float32),
+             "ssm": jnp.asarray(rng.standard_normal((2, 1, 4, 4)), jnp.float32),
+             "ck": jnp.ones((2, 1, 3, 4), jnp.float32)}]
+
+
+def test_quantize_tree_targets_seq_leaves_only():
+    caches = _tree(np.random.default_rng(1))
+    qt, meta = quantize_tree(caches, block=8)
+    # dict leaves flatten sorted by key: ck=0, k=1, ssm=2, v=3
+    assert sorted(meta.scales) == ["1", "3"]
+    assert qt[0]["k"].dtype == jnp.int8 and qt[0]["v"].dtype == jnp.int8
+    # state/constant leaves pass through untouched (lossless)
+    np.testing.assert_array_equal(np.asarray(qt[0]["ssm"]),
+                                  np.asarray(caches[0]["ssm"]))
+    np.testing.assert_array_equal(np.asarray(qt[0]["ck"]),
+                                  np.asarray(caches[0]["ck"]))
+    dt = dequantize_tree(qt, meta)
+    assert dt[0]["k"].dtype == jnp.float32
+    err = np.abs(np.asarray(dt[0]["k"]) - np.asarray(caches[0]["k"]))
+    assert err.max() <= float(np.asarray(meta.scales["1"]).max()) / 2 + 1e-7
+    assert jax.tree.structure(dt) == jax.tree.structure(caches)
+
+
+def test_quant_meta_counts_scale_bytes():
+    _, meta = quantize_tree(_tree(np.random.default_rng(2)), block=8)
+    assert meta.nbytes() == sum(s.nbytes for s in meta.scales.values()) > 0
+
+
+def test_already_int8_tree_is_noop():
+    qt, meta = quantize_tree(_tree(np.random.default_rng(3)), block=8)
+    qt2, meta2 = quantize_tree(qt, block=8)
+    assert not meta2.scales  # int8 leaves are not floating: nothing to do
+
+
+# -- kernel parity ---------------------------------------------------------
+
+def test_kernel_matches_ref_exactly():
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.integers(-127, 128, (6, 8, 16)), jnp.int8)
+    s = jnp.asarray(rng.uniform(1e-3, 2.0, (6,)), jnp.float32)
+    out = dequant_blocks_streams(q, s, interpret=True)
+    ref = dequant_blocks_ref(q, s)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_leaf_mode_routing_matches():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((2, 1, 24, 2, 8)), jnp.float32)
+    q, s = quantize_leaf(x, 8)
+    a = dequantize_leaf(q, s, block=8, dtype=jnp.float32, mode="ref")
+    b = dequantize_leaf(q, s, block=8, dtype=jnp.float32, mode="kernel")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- precision resolution and arbitration ----------------------------------
+
+def test_resolve_precision_env_and_validation(monkeypatch):
+    assert resolve_precision(None) == "auto"
+    monkeypatch.setenv("REPRO_SEGMENT_PRECISION", "fp32")
+    assert resolve_precision(None) == "fp32"
+    assert resolve_precision("int8") == "int8"  # explicit kwarg wins
+    with pytest.raises(ValueError, match="segment precision"):
+        resolve_precision("fp16")
+    assert set(PRECISIONS) == {"auto", "fp32", "int8"}
+
+
+def test_precision_action_prices_roundtrip_vs_rebuild():
+    cm = serve_cost_model()
+    # a real segment: rebuilding 512 tokens dwarfs a (de)quant pass
+    assert cm.precision_action(512, 512 * 4096, expected_reuses=1.0) == "int8"
+    # no expected reuse -> freed bytes buy nothing: stay lossless
+    assert cm.precision_action(512, 512 * 4096, expected_reuses=0.0) == "fp32"
+    # degenerate: huge payload for a trivially rebuilt extent
+    assert cm.precision_action(1, 10**9, expected_reuses=1.0) == "fp32"
+
+
+def test_precision_action_pins_hot_segments_unless_pressured():
+    cm = serve_cost_model()
+    hot = cm.fp32_pin_reuses + 1
+    assert cm.precision_action(512, 512 * 4096, expected_reuses=hot,
+                               pressured=False) == "fp32"
+    assert cm.precision_action(512, 512 * 4096, expected_reuses=hot,
+                               pressured=True) == "int8"
+
+
+def test_quantize_dequantize_seconds_scale_with_bytes():
+    cm = CostModel()
+    assert cm.quantize_s(2 * 10**6) == pytest.approx(2 * cm.quantize_s(10**6))
+    assert cm.dequantize_s(10**6) > 0

@@ -1,0 +1,375 @@
+"""Quantized segment residency: the precision dimension of the store.
+
+Contracts pinned here:
+
+  * **forced int8** — ``precision="int8"`` compresses every admitted
+    segment at the door (~4× fewer resident bytes), payloads reconstruct
+    within the blockwise ``scale/2`` bound, and byte accounting includes
+    the scale sidecars;
+  * **cost-priced auto** — under device pressure with tiers configured,
+    ``"auto"`` quantizes long-tail victims *in place* (the rung above
+    host) instead of paying a d2h copy, while hot documents — observed
+    prior at/above ``fp32_pin_reuses`` — keep their bit-exact fp32
+    payload and take the tier ladder instead; segments demoting off the
+    device compress on the way out (pressure overrides the pin);
+  * **quantized cold tiers** — int8 spill files and snapshot entries are
+    deflated npz (zlib) carrying ``qscale_{j}`` sidecars; demote /
+    promote / snapshot round-trips preserve the int8 payload and its
+    scales bit-for-bit, and disk entries rebuild their sidecar lazily on
+    first promotion;
+  * **manifest v3** — records carry ``precision`` (+ ``quant`` block
+    metadata); v2 snapshots still load, defaulting every entry to fp32;
+  * **fp32 restores PR 6 exactly** — with ``REPRO_SEGMENT_PRECISION=
+    fp32`` (or the kwarg) a pressured tiered manager produces token
+    streams bit-identical to a plain un-tiered manager.
+"""
+import json
+import zipfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.descriptors import Range
+from repro.core.quant import dequantize_tree
+from repro.core.store import MANIFEST_NAME
+from repro.serve.kv_cache import SegmentStore, cache_nbytes
+
+
+def _seg(tokens: int, fill: float = 1.0, width: int = 4):
+    return {"k": jnp.full((1, 1, tokens, 2, width), fill, jnp.float32)}
+
+
+NB8 = cache_nbytes(_seg(8))
+
+
+def _store(tmp_path=None, **kw):
+    spill = dict(spill_dir=tmp_path / "spill") if tmp_path is not None else {}
+    kw.setdefault("seq_bucket", 8)
+    return SegmentStore(**spill, **kw)
+
+
+def _assert_reconstructs(seg, fill):
+    """Dequantized payload within scale/2 of the original constant fill."""
+    assert seg.precision == "int8" and seg.quant is not None
+    back = dequantize_tree(seg.caches, seg.quant)
+    tol = max(float(np.asarray(s).max()) for s in seg.quant.scales.values())
+    np.testing.assert_allclose(np.asarray(back["k"]), fill,
+                               atol=tol / 2 + 1e-7)
+
+
+# ---------------------------------------------------------------------------
+# forced int8: compression at the door
+# ---------------------------------------------------------------------------
+
+def test_forced_int8_quantizes_at_put():
+    store = _store(precision="int8")
+    sid = store.put(Range(0, 8), _seg(8, 2.5), doc_id="a")
+    seg = store._segs[sid]
+    assert seg.precision == "int8"
+    assert seg.caches["k"].dtype == jnp.int8
+    # bytes: int8 payload + fp32 per-block scales, well under the fp32 seg
+    assert seg.nbytes == cache_nbytes(seg.caches) + seg.quant.nbytes()
+    assert seg.nbytes < NB8 // 2
+    assert store.quantized == 1 and store.quantized_segments() == 1
+    assert store.quant_bytes_saved == NB8 - seg.nbytes
+    _assert_reconstructs(seg, 2.5)
+
+
+def test_fp32_precision_never_quantizes():
+    store = _store(precision="fp32", byte_budget=2 * NB8 + 1,
+                   host_budget=64 * NB8)
+    for i in range(4):
+        store.put(Range(8 * i, 8 * i + 8), _seg(8, float(i + 1)), doc_id="a")
+    assert store.quantized == 0 and store.quantized_segments() == 0
+    assert all(s.precision == "fp32" for s in store._segs.values())
+
+
+def test_precision_env_override_and_validation(monkeypatch):
+    monkeypatch.setenv("REPRO_SEGMENT_PRECISION", "int8")
+    assert _store().precision == "int8"
+    monkeypatch.setenv("REPRO_SEGMENT_PRECISION", "fp16")
+    with pytest.raises(ValueError, match="segment precision"):
+        _store()
+    # explicit kwarg beats the env
+    assert _store(precision="fp32").precision == "fp32"
+
+
+# ---------------------------------------------------------------------------
+# auto: quantize-on-pressure as the rung above host
+# ---------------------------------------------------------------------------
+
+def test_auto_quantizes_victims_in_place_before_demoting():
+    store = _store(precision="auto", byte_budget=2 * NB8 + 1,
+                   host_budget=64 * NB8)
+    for i in range(4):
+        store.put(Range(8 * i, 8 * i + 8), _seg(8, float(i + 1)), doc_id="a")
+    # pressure was absorbed by shrinking victims, not by moving them
+    assert store.quantized >= 2
+    assert store.demotions == {"host": 0, "disk": 0}
+    assert store.evictions == 0 and len(store) == 4
+    assert store.device_nbytes() <= store.byte_budget
+    for sid, seg in store._segs.items():
+        if seg.precision == "int8":
+            _assert_reconstructs(seg, float(
+                1 + [s for s in store._segs].index(sid)))
+
+
+def test_auto_without_tiers_stays_fp32():
+    # no host/disk rungs configured: the pre-precision store, bit for bit
+    store = _store(precision="auto", byte_budget=2 * NB8 + 1)
+    for i in range(4):
+        store.put(Range(8 * i, 8 * i + 8), _seg(8), doc_id="a")
+    assert store.quantized == 0
+    assert all(s.precision == "fp32" for s in store._segs.values())
+
+
+def test_hot_documents_keep_fp32_on_device():
+    store = _store(precision="auto", host_budget=64 * NB8)
+    hot = store.put(Range(0, 8), _seg(8, 9.0), doc_id="hot")
+    # real traffic lifts the observed prior past fp32_pin_reuses
+    need = int(store.cost.fp32_pin_reuses * 2) + 2
+    for _ in range(need):
+        store.get(hot)
+    assert store.admission_prior("hot") >= store.cost.fp32_pin_reuses
+    store.byte_budget = 3 * NB8 + 1
+    for i in range(1, 6):
+        store.put(Range(8 * i, 8 * i + 8), _seg(8), doc_id="cold")
+    seg = store._segs[hot]
+    # cold victims shrank; the hot segment kept its lossless device copy
+    assert store.quantized >= 1
+    assert seg.precision == "fp32" and seg.tier == "device"
+    np.testing.assert_array_equal(np.asarray(seg.caches["k"]),
+                                  np.asarray(_seg(8, 9.0)["k"]))
+
+
+def test_demotion_compresses_on_the_way_out(tmp_path):
+    # pathological budgets force a demotion even though quantization alone
+    # would fit: a segment leaving the device quantizes first (pressure
+    # overrides the hot pin), so lower tiers hold int8 bytes
+    store = _store(tmp_path, precision="auto", byte_budget=1,
+                   host_budget=64 * NB8)
+    a = store.put(Range(0, 8), _seg(8, 3.0), doc_id="a")
+    store.put(Range(8, 16), _seg(8, 4.0), doc_id="a")
+    demoted = store._segs[a]
+    assert demoted.tier == "host"
+    assert demoted.precision == "int8"
+    assert isinstance(next(iter(demoted.caches.values())), np.ndarray)
+    assert demoted.caches["k"].dtype == np.int8
+    # scales moved to host alongside the payload
+    assert all(isinstance(s, np.ndarray)
+               for s in demoted.quant.scales.values())
+
+
+# ---------------------------------------------------------------------------
+# quantized cold tiers: spill, promote, compressed payloads
+# ---------------------------------------------------------------------------
+
+def _spilled_int8(tmp_path):
+    store = _store(tmp_path, precision="int8", byte_budget=1, host_budget=1)
+    sids = [store.put(Range(8 * i, 8 * i + 8), _seg(8, float(i + 1)),
+                      doc_id="a")
+            for i in range(3)]
+    store.flush_saves()
+    disk = [s for s in sids if store._segs[s].tier == "disk"]
+    assert disk
+    return store, sids, disk
+
+
+def test_quantized_spill_roundtrip(tmp_path):
+    store, sids, disk = _spilled_int8(tmp_path)
+    victim = disk[0]
+    spill = store._segs[victim].spill
+    with np.load(spill["file"]) as z:
+        assert any(k.startswith("qscale_") for k in z.files)
+        info = zipfile.ZipFile(spill["file"]).infolist()
+    # int8 payloads deflate (zlib); fp32 spills stay stored-uncompressed
+    assert all(m.compress_type == zipfile.ZIP_DEFLATED for m in info)
+    assert spill["record"]["precision"] == "int8"
+    got = store.get(victim)
+    assert got.tier == "device" and got.precision == "int8"
+    assert got.caches["k"].dtype == jnp.int8
+    _assert_reconstructs(got, float(sids.index(victim) + 1))
+
+
+def test_fp32_spill_stays_uncompressed(tmp_path):
+    store = _store(tmp_path, precision="fp32", byte_budget=1, host_budget=1)
+    store.put(Range(0, 8), _seg(8), doc_id="a")
+    store.put(Range(8, 16), _seg(8), doc_id="a")
+    store.flush_saves()
+    disk = next(s for s in store._segs.values() if s.tier == "disk")
+    info = zipfile.ZipFile(disk.spill["file"]).infolist()
+    assert all(m.compress_type == zipfile.ZIP_STORED for m in info)
+
+
+def test_quantized_snapshot_roundtrip(tmp_path):
+    store = _store(precision="int8")
+    sids = [store.put(Range(8 * i, 8 * i + 8), _seg(8, float(i + 1)),
+                      doc_id="a")
+            for i in range(3)]
+    store.save(tmp_path / "st")
+    manifest = json.loads((tmp_path / "st" / MANIFEST_NAME).read_text())
+    assert manifest["version"] == 3
+    for rec in manifest["entries"]:
+        assert rec["precision"] == "int8"
+        assert rec["quant"]["block"] == store.seq_bucket
+        entry = zipfile.ZipFile(tmp_path / "st" / rec["file"]).infolist()
+        assert all(m.compress_type == zipfile.ZIP_DEFLATED for m in entry)
+
+    # a future fp32 policy cannot resurrect the lost mantissas: int8
+    # entries reload as int8, with their sidecars and exact byte counts
+    loaded = SegmentStore.load(tmp_path / "st", precision="fp32")
+    assert len(loaded) == 3 and loaded.quantized_segments() == 3
+    for s in sids:
+        orig, back = store._segs[s], loaded._segs[s]
+        assert back.precision == "int8" and back.quant is not None
+        assert back.nbytes == orig.nbytes
+        np.testing.assert_array_equal(np.asarray(back.caches["k"]),
+                                      np.asarray(orig.caches["k"]))
+        for k, sc in orig.quant.scales.items():
+            np.testing.assert_array_equal(np.asarray(back.quant.scales[k]),
+                                          np.asarray(sc))
+        _assert_reconstructs(back, float(sids.index(s) + 1))
+
+
+@pytest.mark.slow
+def test_tiered_quantized_snapshot_restores_split(tmp_path):
+    store, sids, disk = _spilled_int8(tmp_path)
+    split = {s: store._segs[s].tier for s in sids}
+    store.save(tmp_path / "st")
+    loaded = SegmentStore.load(tmp_path / "st", byte_budget=1, host_budget=1,
+                               spill_dir=tmp_path / "spill2")
+    assert {s: loaded._segs[s].tier for s in sids} == split
+    for s in disk:
+        seg = loaded._segs[s]
+        # cold entries stay cold: sidecar rebuilt lazily on first touch
+        assert seg.caches is None and seg.quant is None
+        assert seg.spill["record"]["precision"] == "int8"
+        got = loaded.get(s)
+        assert got.quant is not None and got.quant.block == store.seq_bucket
+        _assert_reconstructs(got, float(sids.index(s) + 1))
+
+
+def test_v2_manifest_loads_as_fp32(tmp_path):
+    store = _store(precision="fp32")
+    store.put(Range(0, 8), _seg(8, 5.0), doc_id="a")
+    store.save(tmp_path / "st")
+    mpath = tmp_path / "st" / MANIFEST_NAME
+    manifest = json.loads(mpath.read_text())
+    manifest["version"] = 2
+    for rec in manifest["entries"]:
+        rec.pop("precision", None)
+    mpath.write_text(json.dumps(manifest))
+    loaded = SegmentStore.load(tmp_path / "st")
+    assert len(loaded) == 1 and loaded.quantized_segments() == 0
+    seg = next(iter(loaded._segs.values()))
+    assert seg.precision == "fp32" and seg.quant is None
+    np.testing.assert_array_equal(np.asarray(seg.caches["k"]),
+                                  np.asarray(_seg(8, 5.0)["k"]))
+
+
+def test_v1_manifest_still_rejected(tmp_path):
+    store = _store()
+    store.put(Range(0, 8), _seg(8), doc_id="a")
+    store.save(tmp_path / "st")
+    mpath = tmp_path / "st" / MANIFEST_NAME
+    manifest = json.loads(mpath.read_text())
+    manifest["version"] = 1
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(IOError, match="manifest version"):
+        SegmentStore.load(tmp_path / "st")
+
+
+# ---------------------------------------------------------------------------
+# serving integration: dequant-on-reuse + fp32 fingerprint
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    from repro.configs import ARCHS, reduced
+    from repro.models.lm import LM
+
+    cfg = reduced(ARCHS["deepseek-67b"])
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    doc = np.random.default_rng(11).integers(
+        0, cfg.vocab_size, 160).astype(np.int32)
+    return model, params, doc
+
+
+def _tokens(model, params, doc, store=None, **submits):
+    from repro.serve.session import SessionManager
+
+    kw = dict(store=store) if store is not None else {}
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
+                         **kw)
+    sid = mgr.add_session(doc)
+    mgr.submit(sid, submits.get("prefix", 128), submits.get("n_new", 3),
+               seed=5)
+    out = mgr.run()[sid]
+    return out, mgr
+
+
+@pytest.mark.slow
+def test_fp32_tiered_stream_bit_identical(lm_setup, monkeypatch):
+    """The fingerprint: REPRO_SEGMENT_PRECISION=fp32 under tiered byte
+    pressure produces exactly the pre-precision (PR 6) token stream —
+    which is itself bit-identical to an unpressured, un-tiered manager."""
+    model, params, doc = lm_setup
+    base, base_mgr = _tokens(model, params, doc)
+    budget = max(base_mgr.store.nbytes() // 2, 1)
+
+    monkeypatch.setenv("REPRO_SEGMENT_PRECISION", "fp32")
+    store = SegmentStore(byte_budget=budget, seq_bucket=32,
+                         host_budget=1 << 30,
+                         cost_model=base_mgr.store.cost)
+    assert store.precision == "fp32"
+    tokens, mgr = _tokens(model, params, doc, store=store)
+    assert tokens == base
+    assert store.quantized == 0 and mgr.builder.dequants == 0
+    assert store.demotions["host"] > 0          # the pressure was real
+
+
+@pytest.mark.slow
+def test_int8_reuse_dequantizes_and_serves(lm_setup):
+    """Forced-int8 residency: reuse hits route through the fused dequant
+    and generation still completes with the requested shape."""
+    from repro.serve.session import SessionManager
+
+    model, params, doc = lm_setup
+    store = SegmentStore(seq_bucket=32, precision="int8")
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
+                         store=store)
+    s1 = mgr.add_session(doc)
+    mgr.submit(s1, 128, 2, seed=5)
+    first = mgr.run()[s1]
+    assert store.quantized_segments() > 0
+    # a second session over the same document reuses the int8 segments
+    s2 = mgr.add_session(doc)
+    mgr.submit(s2, 128, 2, seed=5)
+    second = mgr.run()[s2]
+    assert mgr.builder.dequants > 0
+    assert len(first) == len(second) == 2
+    rep = mgr.report()
+    assert rep["quantized_segments"] == store.quantized_segments()
+    assert rep["quantized"] == store.quantized > 0
+    assert rep["quant_bytes_saved"] == store.quant_bytes_saved > 0
+    assert rep["dequants"] == mgr.builder.dequants
+
+
+def test_report_quant_keys_zero_on_idle_manager():
+    import math
+
+    from repro.configs import ARCHS, reduced
+    from repro.models.lm import LM
+    from repro.serve.session import SessionManager
+
+    cfg = reduced(ARCHS["deepseek-67b"])
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rep = SessionManager(model, params, chunk_tokens=32,
+                         decode_bucket=32).report()
+    for key in ("quantized_segments", "quantized", "quant_bytes_saved",
+                "dequants"):
+        assert key in rep and math.isfinite(rep[key]) and rep[key] == 0, key

@@ -358,13 +358,13 @@ def test_manifest_is_json_with_schema(tmp_path):
     store = _segment_store_with_two()
     store.save(tmp_path / "st")
     manifest = json.loads((tmp_path / "st" / MANIFEST_NAME).read_text())
-    assert manifest["version"] == 2
+    assert manifest["version"] == 3
     assert manifest["kind"] == "SegmentStore"
     assert manifest["store"]["seq_bucket"] == 8
     assert len(manifest["entries"]) == 2
     for rec in manifest["entries"]:
         assert {"file", "sha256", "retention", "tree",
-                "valid", "capacity"} <= set(rec)
+                "valid", "capacity", "precision"} <= set(rec)
 
 
 # ---------------------------------------------------------------------------

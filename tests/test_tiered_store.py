@@ -48,6 +48,12 @@ NB8 = cache_nbytes(_seg(8))
 
 def _tiered(tmp_path=None, *, byte_budget=2 * NB8 + 1, host_budget=64 * NB8,
             **kw):
+    # precision pinned fp32: these tests document the PR 6 contract —
+    # demote/promote round-trips are bit-exact copies of the padded
+    # buffers.  The quantized-residency behaviour ("auto"/"int8", which
+    # would otherwise shrink victims in place before any demotion) has
+    # its own suite in test_quant_store.py.
+    kw.setdefault("precision", "fp32")
     spill = dict(spill_dir=tmp_path / "spill") if tmp_path is not None else {}
     return SegmentStore(byte_budget=byte_budget, seq_bucket=8,
                         host_budget=host_budget, **spill, **kw)
