@@ -207,6 +207,59 @@ class CostModel:
                 best, best_cost = tier, c
         return best
 
+    # -- delta updates (edits / add+delete data) ---------------------------
+    def edit_rebuild_s(self, n_total: int, n_reused: int, reuse_nbytes: int,
+                       *, k_segments: int = 1) -> float:
+        """Seconds to rebuild an *edited* entry by reusing its unchanged
+        prefix: load the ``k_segments`` stored segments that survive the
+        edit (``C`` over their resident bytes), rescan only the
+        ``n_total − n_reused`` suffix points past the divergence
+        (``F``), and merge.  The paper's incremental-maintenance move in
+        the same F/C vocabulary the planner, admission, and eviction
+        already trade in — ``plan_edit`` compares this against a
+        from-scratch ``F(n_total)`` to decide whether the edit path is
+        worth taking at all.
+        """
+        if n_reused <= 0:
+            return self.fetch_points(n_total)
+        load = (k_segments * self.model_fixed_s
+                + reuse_nbytes / self.model_bytes_per_s)
+        suffix = max(n_total - n_reused, 0)
+        parts = k_segments + (1 if suffix else 0)
+        return load + self.fetch_points(suffix) + self.merge(parts)
+
+    def edit_action(self, n_total: int, n_reused: int, reuse_nbytes: int,
+                    *, k_segments: int = 1) -> str:
+        """``"edit"`` when the reuse-prefix + rebuild-suffix path is
+        cheaper than rebuilding from scratch, else ``"scratch"``."""
+        edit = self.edit_rebuild_s(n_total, n_reused, reuse_nbytes,
+                                   k_segments=k_segments)
+        return "edit" if n_reused > 0 and edit < self.fetch_points(n_total) \
+            else "scratch"
+
+    def delta_update_s(self, delta_points: list, *,
+                       k_merges: Optional[int] = None) -> float:
+        """Seconds to maintain a materialized stats object through a set
+        of add/delete ranges: one base scan per delta range plus the
+        combines/uncombines folding them in (§3.2/§3.3)."""
+        ks = len(delta_points) if k_merges is None else k_merges
+        return sum(self.fetch_points(n) for n in delta_points) + self.merge(ks + 1)
+
+    def update_action(self, delta_points: list, refit_points: list, *,
+                      supports_delete: bool = True,
+                      deleting: bool = False) -> str:
+        """Arbitrate delta-maintenance vs refit for an analytics update:
+        ``"delta"`` applies the add/delete ranges to the existing stats,
+        ``"refit"`` rescans the new coverage from base data.  Monoid-only
+        families (no inverse) must refit whenever a delete is involved.
+        """
+        if deleting and not supports_delete:
+            return "refit"
+        delta = self.delta_update_s(delta_points)
+        refit = (sum(self.fetch_points(n) for n in refit_points)
+                 + self.merge(len(refit_points)))
+        return "delta" if delta < refit else "refit"
+
     # -- segment precision -------------------------------------------------
     def quantize_s(self, nbytes: int) -> float:
         """Seconds to quantize an ``nbytes`` fp32 payload to int8 — one

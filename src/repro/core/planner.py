@@ -13,7 +13,8 @@ from typing import Any, Optional
 
 import numpy as np
 
-from .descriptors import Range
+from .cost import CostModel
+from .descriptors import DescriptorIndex, Range, covered_size
 from .families import ModelFamily
 from .optimizer import Plan
 from .store import ModelStore
@@ -100,3 +101,94 @@ def execute(
     timings.merge_s += time.perf_counter() - t0
     return ExecResult(model=model, stats=total, plan=plan, timings=timings,
                       materialized_ids=new_ids)
+
+
+# ---------------------------------------------------------------------------
+# Delta updates: edit-rebuild planning (reuse-prefix + rebuild-suffix)
+# ---------------------------------------------------------------------------
+
+def token_divergence(old_ids, new_ids) -> int:
+    """Length of the common prefix of two token sequences.
+
+    The first divergence point bounds KV reuse exactly: position ``i``'s
+    cached KV depends on *all* tokens ``[0, i]``, so a stored segment
+    ``[lo, hi)`` built for the old document is valid for the edited one
+    iff ``hi ≤ divergence`` — prefix reuse only, never interior reuse
+    (unlike the analytics stats, KV segments are not position-invariant).
+    """
+    old = np.asarray(old_ids).ravel()
+    new = np.asarray(new_ids).ravel()
+    n = int(min(old.size, new.size))
+    if n == 0:
+        return 0
+    neq = old[:n] != new[:n]
+    i = int(np.argmax(neq))
+    return n if not neq[i] else i
+
+
+@dataclass
+class EditPlan:
+    """Reuse-prefix + rebuild-suffix plan for one document edit.
+
+    ``reuse`` lists the stored segments that survive the edit (every
+    descriptor strictly before the divergence point), ``orphans`` the ids
+    valid only for the old content — the store must release them from
+    every residency tier or the edit leaks bytes.  ``action`` is the cost
+    model's call (``edit_action``): ``"scratch"`` means the planner
+    priced the reuse path above a clean rebuild (e.g. an edit at offset
+    0), in which case callers skip the rekey and every segment orphans.
+    """
+
+    divergence: int             # first differing token index
+    length: int                 # tokens of the edited document to build
+    reuse: list                 # [(seg_id, Range)], rng.hi <= divergence
+    orphans: list               # seg ids invalidated by the edit
+    reused_tokens: int          # covered_size of the reuse ranges
+    rebuild_tokens: int         # length - reused_tokens (priced extent)
+    edit_cost_s: float
+    scratch_cost_s: float
+    action: str                 # "edit" | "scratch"
+
+    @property
+    def rebuild_frac(self) -> float:
+        return self.rebuild_tokens / self.length if self.length else 0.0
+
+
+def plan_edit(old_ids, new_ids, index: DescriptorIndex, cost: CostModel,
+              segment_bytes: dict, *, length: Optional[int] = None) -> EditPlan:
+    """Price serving an edited document against its stored segments.
+
+    Diffs the old/new token ids for the first divergence point, splits
+    the store's descriptor index into survivors (reusable as-is) and
+    orphans, and prices reuse-prefix + rebuild-suffix
+    (``cost.edit_rebuild_s``) against a from-scratch build (``F(n)``) in
+    the same vocabulary every other lifecycle decision uses.  The actual
+    suffix build still goes through the ordinary Dijkstra planner once
+    the survivors are rekeyed — this plan decides *whether* and *what*
+    to rekey, and reports the reuse/rebuild split for observability.
+    """
+    new = np.asarray(new_ids).ravel()
+    n_total = int(new.size) if length is None else int(length)
+    div = min(token_divergence(old_ids, new), n_total)
+    reuse: list = []
+    orphans: list = []
+    for sid, rng in index.items():
+        if rng.hi <= div:
+            reuse.append((sid, rng))
+        else:
+            orphans.append(sid)
+    reused = covered_size([rng for _, rng in reuse])
+    reuse_nbytes = sum(segment_bytes.get(sid, 0) for sid, _ in reuse)
+    edit_cost = cost.edit_rebuild_s(n_total, reused, reuse_nbytes,
+                                    k_segments=max(len(reuse), 1))
+    scratch_cost = cost.fetch_points(n_total)
+    action = "edit" if reuse and edit_cost < scratch_cost else "scratch"
+    if action == "scratch":
+        # nothing survives: a scratch build replaces every stored segment
+        orphans = orphans + [sid for sid, _ in reuse]
+        reuse, reused = [], 0
+    return EditPlan(divergence=div, length=n_total, reuse=reuse,
+                    orphans=orphans, reused_tokens=reused,
+                    rebuild_tokens=n_total - reused,
+                    edit_cost_s=edit_cost, scratch_cost_s=scratch_cost,
+                    action=action)

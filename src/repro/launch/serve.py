@@ -32,6 +32,15 @@ directory compactly on exit:
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-67b --reduced \
       --doc-len 1024 --sessions 4 --requests 2 --byte-budget 50000000 \
       --host-budget 500000000 --spill-dir /tmp/kvspill --store-dir /tmp/kvstore
+
+Edit traffic: ``--edit-every N`` mutates each session's document after
+every N request rounds (insert/delete/replace at a random offset) and
+serves the edited text via the delta-update path — stored segments before
+the divergence point are rekeyed to the edited content, the rest released
+from every tier:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-67b --reduced \
+      --doc-len 1024 --sessions 4 --requests 4 --edit-every 1
 """
 from __future__ import annotations
 
@@ -224,14 +233,31 @@ def run_multi(args, cfg, model, params, rng) -> None:
 
     import time
 
+    edit_reused = edit_rebuilt = 0
     t0 = time.perf_counter()
     for r in range(args.requests):
         for i, sid in enumerate(sids):
-            L = int(rng.integers(args.doc_len // 4, args.doc_len))
+            dl = len(mgr.sessions[sid].doc)
+            L = int(rng.integers(max(dl // 4, 1), max(dl, 2)))
             plan = mgr.submit(sid, L, args.new_tokens, greedy=False,
                               seed=r * 1000 + i)
             assert plan.validate_telescoping()
         mgr.run()
+        if args.edit_every and (r + 1) % args.edit_every == 0:
+            # edit traffic: each session's document mutates mid-stream and
+            # the store keeps every segment before the divergence point
+            from repro.data.edits import EDIT_KINDS, random_edit
+
+            kinds = (EDIT_KINDS if args.edit_kind == "random"
+                     else (args.edit_kind,))
+            for sid in sids:
+                doc = mgr.sessions[sid].doc
+                new_doc, _, _, _ = random_edit(
+                    rng, doc, cfg.vocab_size, kinds=kinds,
+                    max_span=args.edit_span, min_offset=len(doc) // 4)
+                eplan = mgr.update_document(sid, new_doc)
+                edit_reused += eplan.reused_tokens
+                edit_rebuilt += eplan.rebuild_tokens
         if args.snapshot_every and (r + 1) % args.snapshot_every == 0:
             _snapshot(mgr.store, args)
     wall = time.perf_counter() - t0
@@ -259,6 +285,15 @@ def run_multi(args, cfg, model, params, rng) -> None:
           f"(mean join wait {rep['mean_join_wait_s']*1e3:.1f} ms), "
           f"{rep['overlap_steps']} decode rounds overlapped builds "
           f"(mean batch {rep['overlap_batch']:.2f})")
+    if args.edit_every:
+        sc = mgr.sched
+        tot = edit_reused + edit_rebuilt
+        print(f"  edits: {sc.edits} applied, "
+              f"{sc.edit_reused_segments} segments rekeyed, "
+              f"{sc.edit_orphaned} orphaned, "
+              f"{sc.edit_cancelled} requests cancelled, "
+              f"reused {edit_reused}/{tot} planned tokens "
+              f"({edit_reused / tot if tot else 0.0:.1%})")
     _print_tier_report(st, args)
     if args.store_dir and st.last_save:
         print(f"  snapshot: {st.last_save['written']} entries written, "
@@ -298,6 +333,18 @@ def main() -> None:
                     help="monolithic loop: every submit blocks all decoding "
                          "sessions until its prefix build completes "
                          "(bitwise-identical tokens and store contents)")
+    ap.add_argument("--edit-every", type=int, default=0,
+                    help="multi-session edit traffic: after every N request "
+                         "rounds, mutate each session's document in place "
+                         "(insert/delete/replace) and serve the edited text "
+                         "via the delta-update path — segments before the "
+                         "divergence point are rekeyed, the rest released "
+                         "(0 = no edits)")
+    ap.add_argument("--edit-kind", choices=["insert", "delete", "replace",
+                                            "random"], default="random",
+                    help="which edit operation --edit-every applies")
+    ap.add_argument("--edit-span", type=int, default=16,
+                    help="maximum tokens one edit inserts/deletes/replaces")
     ap.add_argument("--store-dir", default="",
                     help="directory for durable segment-store snapshots; an "
                          "existing snapshot is reloaded on startup (warm "

@@ -545,6 +545,32 @@ class ServeEngine:
         return out_tokens, plan
 
     # ------------------------------------------------------------------
+    def update_document(self, new_tokens: np.ndarray):
+        """Swap in edited document content, keeping the reusable KV prefix.
+
+        Single-session counterpart of
+        :meth:`repro.serve.session.SessionManager.update_document`: diff
+        old vs new tokens, rekey every stored segment strictly before the
+        divergence point to the edited content's key when the cost model
+        prices the edit-rebuild below from-scratch, and release the rest
+        from every tier.  Returns the :class:`~repro.core.planner.EditPlan`.
+        """
+        from repro.core.planner import plan_edit
+
+        from .session import doc_key
+
+        new_doc = np.asarray(new_tokens, np.int32)
+        old_id = self.doc_id
+        new_id = doc_key(new_doc, self.extras)
+        eplan = plan_edit(self.doc, new_doc, self.store.index(old_id),
+                          self.cost, self.store.segment_bytes(old_id))
+        if new_id != old_id:
+            if eplan.action == "edit":
+                self.store.rekey(old_id, new_id, upto=eplan.divergence)
+            self.store.release_doc(old_id)
+        self.doc, self.doc_id = new_doc, new_id
+        return eplan
+
     def baseline_build(self, length: int):
         """No-reuse reference: prefill everything from scratch."""
         batch = {"tokens": jnp.asarray(self.doc[None, :length]), **self.extras}

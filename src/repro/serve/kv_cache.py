@@ -316,6 +316,10 @@ class SegmentStore(PinnedStore):
         #: lineages cannot grow a segment's metadata without bound
         self.max_aliases = 64
         self.alias_skips = 0
+        #: delta-update traffic: rekey() calls (one per applied edit) and
+        #: the segments they migrated to the edited document's index
+        self.rekeys = 0
+        self.rekeyed_segments = 0
         #: per-document observed traffic: doc_id -> [segments put, hits] —
         #: the empirical reuse signal behind ``admission_prior``
         self._doc_stats: dict[str, list[int]] = {}
@@ -531,6 +535,52 @@ class SegmentStore(PinnedStore):
                     del self._segs[sid]
                     dropped += 1
         return dropped
+
+    def rekey(self, old_doc: str, new_doc: str, *, upto: int) -> int:
+        """Migrate the surviving prefix of an edited document to its new id.
+
+        An edit changes the document's content key; every stored segment
+        ending at or before the divergence point (``upto``) is still
+        byte-valid for the new content (KV depends only on the token
+        prefix), so instead of rebuilding it we *move* it: out of the old
+        index, into the new one, with ownership transferred.  Segments
+        reaching past ``upto`` stay behind for the follow-up
+        ``release_doc(old_doc)`` to drop from every tier.
+
+        The old document's traffic history moves too: its puts/hits merge
+        into the new key's ``_doc_stats`` entry and the old entry is
+        popped, so admission/retention priors follow the *document* across
+        edits rather than pinning fp32 on a content key that no longer
+        exists.  Returns the number of segments migrated.
+        """
+        if old_doc == new_doc or old_doc not in self._indexes:
+            return 0
+        old_idx = self._indexes[old_doc]
+        new_idx = self.index(new_doc)
+        moved = 0
+        for sid, rng in list(old_idx.items()):
+            if rng.hi > upto:
+                continue
+            seg = self._segs.get(sid)
+            if seg is None:
+                continue
+            old_idx.remove(sid)
+            if sid not in new_idx:
+                new_idx.add(sid, rng)
+            if seg.doc_id == old_doc:
+                seg.doc_id = new_doc
+            else:
+                seg.aliases.add(new_doc)
+            seg.aliases.discard(old_doc)
+            moved += 1
+        stats = self._doc_stats.pop(old_doc, None)
+        if stats is not None:
+            dst = self._doc_stats.setdefault(new_doc, [0, 0])
+            dst[0] += stats[0]
+            dst[1] += stats[1]
+        self.rekeys += 1
+        self.rekeyed_segments += moved
+        return moved
 
     def nbytes(self, doc_id: Optional[str] = None) -> int:
         """Total resident bytes across *all* tiers (see ``tier_bytes`` for

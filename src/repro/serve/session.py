@@ -203,6 +203,11 @@ class SchedulerStats:
     join_wait_s: float = 0.0    # host time blocked waiting on builds at join
     overlap_steps: int = 0      # decode rounds run while ≥1 build in flight
     overlap_rows: int = 0       # decode rows produced in those rounds
+    # delta-update (document edit) counters
+    edits: int = 0              # update_document calls applied
+    edit_reused_segments: int = 0  # segments rekeyed to the edited content
+    edit_orphaned: int = 0      # segments invalidated (released) by edits
+    edit_cancelled: int = 0     # in-flight requests superseded by an edit
 
     # all derived means guard the zero-traffic case: an idle server's
     # report prints 0.0, never NaN
@@ -405,6 +410,73 @@ class SessionManager:
         s.plans.append(plan)
         s.stats.requests += 1
         return plan
+
+    # -- delta updates (document edits) ------------------------------------
+    def update_document(self, sid: int, new_tokens: np.ndarray):
+        """Replace a session's document mid-session, reusing its KV prefix.
+
+        The serving half of the paper's delta-update move: instead of
+        treating the edited text as a brand-new document (full rebuild),
+        diff old vs new tokens and keep every stored segment strictly
+        before the first divergence point — :func:`plan_edit` prices
+        reuse-prefix + rebuild-suffix against a from-scratch build in the
+        cost model's ``F(n)`` vocabulary and the store :meth:`rekey`\\ s
+        the survivors to the edited content's key.  Segments the edit
+        invalidates are released from *every* residency tier (device KV,
+        host copies, disk spill files) so edited documents never leak
+        bytes.
+
+        Works mid-session: any in-flight async build is joined first (its
+        store insertions must land before the edit re-keys the index), and
+        an in-flight *request* is cancelled — the edit supersedes it, the
+        next ``submit`` serves the new content.  Returns the
+        :class:`~repro.core.planner.EditPlan` for observability.
+        """
+        from repro.core.planner import plan_edit
+
+        s = self.sessions[sid]
+        if s.ticket is not None:
+            # the build's chunk segments belong to the *old* content; land
+            # them (and everyone ahead in FIFO) so the edit plan sees them
+            # and rekey/release governs their fate like any stored segment
+            self._flush_tickets()
+            self._join_ticket(s)
+        self._flush_packs([g for g in self._packs if sid in g])
+        if s.busy:
+            # the edit supersedes the in-flight request: its remaining
+            # tokens would continue the old text
+            s.remaining = 0
+            s.mat_pending = False
+            self.sched.edit_cancelled += 1
+        elif s.mat_pending:
+            # materialize first — it can advance the session onto its
+            # generated continuation (changing s.doc/s.doc_id), and the
+            # edit must diff against the document the session now serves
+            self._materialize_decode(s)
+        new_doc = np.asarray(new_tokens, np.int32)
+        old_id = s.doc_id
+        new_id = doc_key(new_doc, s.extras)
+        eplan = plan_edit(s.doc, new_doc, self.store.index(old_id),
+                          self.cost, self.store.segment_bytes(old_id))
+        if new_id != old_id:
+            if eplan.action == "edit":
+                self.store.rekey(old_id, new_id, upto=eplan.divergence)
+            if all(o.doc_id != old_id for o in self.sessions.values()
+                   if o.sid != sid):
+                # nobody else serves the old content: drop its leftover
+                # index (the orphans) from every tier, and its stale
+                # admission-prior stats with it
+                self.store.release_doc(old_id)
+        s.doc, s.doc_id = new_doc, new_id
+        s.caches = None
+        s.logits = None
+        s.greedy_next = None
+        s.pos = 0
+        s.fork_owned = False    # edited content arrived from outside
+        self.sched.edits += 1
+        self.sched.edit_reused_segments += len(eplan.reuse)
+        self.sched.edit_orphaned += len(eplan.orphans)
+        return eplan
 
     # -- scheduler (pipeline stages 2+3) -----------------------------------
     def _flush_tickets(self) -> None:
@@ -700,6 +772,13 @@ class SessionManager:
             "mean_join_wait_s": sc.mean_join_wait_s,
             "overlap_steps": sc.overlap_steps,
             "overlap_batch": sc.overlap_batch,
+            # delta updates: edits applied, prefix segments rekeyed to the
+            # edited content, segments invalidated, requests superseded
+            "edits": sc.edits,
+            "edit_reused_segments": sc.edit_reused_segments,
+            "edit_orphaned": sc.edit_orphaned,
+            "edit_cancelled": sc.edit_cancelled,
+            "rekeyed_segments": st.rekeyed_segments,
             # per-tier occupancy and traffic (device -> host -> disk).
             # All plain ints/floats from counters, so an idle manager
             # reports finite zeros like everything above.

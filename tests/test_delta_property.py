@@ -1,0 +1,299 @@
+"""Property tests for the delta-update path (edits + add/delete deltas).
+
+Serving half: random edit scripts (insert/delete/replace at random
+offsets) against ``plan_edit``'s invariants, and — end to end — an edited
+document served through ``update_document`` streaming bit-identically to
+a from-scratch build of the edited text.
+
+Analytics half: the paper's group laws under the engine's delta API —
+``(S + A) - A == S`` and ``from_data(D ∪ A ∖ B) == from_data(D) + A - B``
+for every delete-supporting suffstats family, and engine-level
+delta-vs-refit agreement at rtol 1e-6.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cost import serve_cost_model
+from repro.core.descriptors import DescriptorIndex, Range, covered_size
+from repro.core.planner import plan_edit, token_divergence
+from repro.core.suffstats import (
+    GaussianNBStats,
+    LinRegStats,
+    MultinomialNBStats,
+)
+from repro.data.edits import EDIT_KINDS, apply_edit
+
+DOC_LEN = 192
+VOCAB = 997
+CHUNK = 32
+D, C = 4, 3
+
+# one edit = (kind, offset, span); offsets deliberately overshoot the
+# document so clamping is exercised too
+edit_scripts = st.lists(
+    st.tuples(st.sampled_from(list(EDIT_KINDS)),
+              st.integers(0, DOC_LEN + 16),
+              st.integers(1, 8)),
+    min_size=1, max_size=4)
+
+
+def _doc(seed=0, n=DOC_LEN):
+    return np.random.default_rng(seed).integers(0, VOCAB, n).astype(np.int32)
+
+
+def _apply_script(doc, script, seed=1):
+    rng = np.random.default_rng(seed)
+    for kind, off, length in script:
+        toks = (None if kind == "delete"
+                else rng.integers(0, VOCAB, length).astype(np.int32))
+        doc = apply_edit(doc, kind, off, length, toks)
+    return doc
+
+
+# -- divergence + plan invariants ------------------------------------------
+
+@given(edit_scripts)
+@settings(max_examples=60, deadline=None)
+def test_token_divergence_is_common_prefix(script):
+    old = _doc()
+    new = _apply_script(old, script)
+    div = token_divergence(old, new)
+    assert 0 <= div <= min(len(old), len(new))
+    assert np.array_equal(old[:div], new[:div])
+    if div < min(len(old), len(new)):
+        assert old[div] != new[div]
+
+
+@given(edit_scripts)
+@settings(max_examples=60, deadline=None)
+def test_plan_edit_partitions_the_index(script):
+    old = _doc()
+    new = _apply_script(old, script)
+    index = DescriptorIndex()
+    nbytes = {}
+    for lo in range(0, DOC_LEN, CHUNK):
+        sid = f"s{lo}"
+        index.add(sid, Range(lo, lo + CHUNK))
+        nbytes[sid] = 4096
+    ep = plan_edit(old, new, index, serve_cost_model(), nbytes)
+    div = token_divergence(old, new)
+    assert ep.divergence == min(div, len(new))
+    assert ep.length == len(new)
+    # reuse ∪ orphans is exactly the index, disjoint
+    reuse_ids = {sid for sid, _ in ep.reuse}
+    assert reuse_ids.isdisjoint(ep.orphans)
+    assert reuse_ids | set(ep.orphans) == {sid for sid, _ in index.items()}
+    # KV validity: every reused segment ends at or before the divergence
+    for _, rng in ep.reuse:
+        assert rng.hi <= ep.divergence
+    assert ep.reused_tokens == covered_size([r for _, r in ep.reuse])
+    assert ep.reused_tokens + ep.rebuild_tokens == ep.length
+    if ep.action == "edit":
+        assert ep.reuse and ep.edit_cost_s < ep.scratch_cost_s
+    else:
+        assert ep.reuse == [] and ep.reused_tokens == 0
+
+
+def test_plan_edit_head_edit_goes_scratch():
+    """An edit at offset 0 invalidates everything: no reuse, all orphans."""
+    old = _doc()
+    new = old.copy()
+    new[0] = (new[0] + 1) % VOCAB
+    index = DescriptorIndex()
+    index.add("a", Range(0, CHUNK))
+    ep = plan_edit(old, new, index, serve_cost_model(), {"a": 4096})
+    assert ep.action == "scratch"
+    assert ep.orphans == ["a"] and ep.reused_tokens == 0
+
+
+# -- suffstats group laws through the delta lens ---------------------------
+
+def _reg(seed, n):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, D)), rng.standard_normal(n)
+
+
+def _cls(seed, n):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, D)), rng.integers(0, C, n)
+
+
+def _counts(seed, n):
+    rng = np.random.default_rng(seed)
+    return rng.poisson(2.0, (n, D)).astype(float), rng.integers(0, C, n)
+
+
+sizes = st.integers(2, 40)
+
+
+@given(sizes, sizes, st.integers(1, 39))
+@settings(max_examples=40, deadline=None)
+def test_linreg_add_delete_parity(n_base, n_add, n_del):
+    Xb, yb = _reg(10, n_base)
+    Xa, ya = _reg(11, n_add)
+    n_del = min(n_del, n_base - 1)
+    S = LinRegStats.from_data(Xb, yb)
+    A = LinRegStats.from_data(Xa, ya)
+    B = LinRegStats.from_data(Xb[:n_del], yb[:n_del])
+    assert ((S + A) - A).allclose(S, rtol=1e-6, atol=1e-8)
+    # from_data(D ∪ A ∖ B) == from_data(D) + A - B
+    direct = LinRegStats.from_data(
+        np.vstack([Xb[n_del:], Xa]), np.concatenate([yb[n_del:], ya]))
+    assert ((S + A) - B).allclose(direct, rtol=1e-6, atol=1e-8)
+
+
+@given(sizes, sizes, st.integers(1, 39))
+@settings(max_examples=40, deadline=None)
+def test_gaussian_nb_add_delete_parity(n_base, n_add, n_del):
+    Xb, yb = _cls(12, n_base)
+    Xa, ya = _cls(13, n_add)
+    n_del = min(n_del, n_base - 1)
+    S = GaussianNBStats.from_data(Xb, yb, C)
+    A = GaussianNBStats.from_data(Xa, ya, C)
+    B = GaussianNBStats.from_data(Xb[:n_del], yb[:n_del], C)
+    assert ((S + A) - A).allclose(S, rtol=1e-6, atol=1e-8)
+    direct = GaussianNBStats.from_data(
+        np.vstack([Xb[n_del:], Xa]), np.concatenate([yb[n_del:], ya]), C)
+    assert ((S + A) - B).allclose(direct, rtol=1e-6, atol=1e-8)
+
+
+@given(sizes, sizes, st.integers(1, 39))
+@settings(max_examples=40, deadline=None)
+def test_multinomial_nb_add_delete_parity(n_base, n_add, n_del):
+    Xb, yb = _counts(14, n_base)
+    Xa, ya = _counts(15, n_add)
+    n_del = min(n_del, n_base - 1)
+    S = MultinomialNBStats.from_data(Xb, yb, C)
+    A = MultinomialNBStats.from_data(Xa, ya, C)
+    B = MultinomialNBStats.from_data(Xb[:n_del], yb[:n_del], C)
+    assert ((S + A) - A).allclose(S, rtol=1e-6, atol=1e-8)
+    direct = MultinomialNBStats.from_data(
+        np.vstack([Xb[n_del:], Xa]), np.concatenate([yb[n_del:], ya]), C)
+    assert ((S + A) - B).allclose(direct, rtol=1e-6, atol=1e-8)
+
+
+# -- engine-level delta maintenance ----------------------------------------
+
+@pytest.fixture(scope="module")
+def reg_engine():
+    from repro.core.engine import IncrementalAnalyticsEngine
+    from repro.data.synthetic import make_regression
+    from repro.data.tabular import ArrayBackend
+
+    X, y = make_regression(30_000, d=6, seed=0)
+    return IncrementalAnalyticsEngine(ArrayBackend(X, y))
+
+
+def test_engine_delta_matches_refit(reg_engine):
+    """Acceptance: delete-delta suffstats match a refit within rtol 1e-6."""
+    from repro.core.descriptors import Range as R
+
+    eng = reg_engine
+    q = eng.query("linreg", R(0, 20_000))
+    up = eng.add_data("linreg", [R(0, 20_000)], q.stats, R(20_000, 30_000))
+    assert up.action == "delta"
+    up2 = eng.delete_data("linreg", up.coverage, up.stats, R(0, 5_000))
+    assert up2.action == "delta"
+    assert up2.coverage == [R(5_000, 30_000)]
+    ref = eng.baseline("linreg", R(5_000, 30_000))
+    assert up2.stats.allclose(ref.stats, rtol=1e-6, atol=1e-8)
+    assert np.allclose(up2.model.weights, ref.model.weights,
+                       rtol=1e-5, atol=1e-8)
+
+
+def test_engine_rejects_inconsistent_deltas(reg_engine):
+    from repro.core.descriptors import Range as R
+
+    eng = reg_engine
+    q = eng.query("linreg", R(0, 10_000))
+    with pytest.raises(ValueError):
+        eng.add_data("linreg", [R(0, 10_000)], q.stats, R(5_000, 15_000))
+    with pytest.raises(ValueError):
+        eng.delete_data("linreg", [R(0, 10_000)], q.stats, R(5_000, 15_000))
+
+
+def test_engine_logreg_delete_forces_refit():
+    """Monoid-only families cannot uncombine: deletes refit, exactly."""
+    from repro.core.engine import IncrementalAnalyticsEngine
+    from repro.core.descriptors import Range as R
+    from repro.data.synthetic import make_classification
+    from repro.data.tabular import ArrayBackend
+
+    X, y = make_classification(12_000, d=4, n_classes=C, seed=2)
+    eng = IncrementalAnalyticsEngine(ArrayBackend(X, y), materialize="never")
+    q = eng.query("logreg", R(0, 10_000))
+    up = eng.delete_data("logreg", [R(0, 10_000)], q.stats, R(0, 2_000))
+    assert up.action == "refit"
+    assert up.coverage == [R(2_000, 10_000)]
+
+
+# -- end-to-end: edited documents stream bit-identically -------------------
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.models.lm import LM
+
+    cfg = reduced(ARCHS["qwen3-32b"])
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    doc = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, DOC_LEN).astype(np.int32)
+    return cfg, model, params, doc
+
+
+@pytest.mark.slow
+@given(edit_scripts)
+@settings(max_examples=4, deadline=None)
+def test_edited_doc_streams_match_scratch(lm_setup, script):
+    """Serving after update_document == from-scratch build of the edit."""
+    from repro.serve.session import SessionManager
+
+    cfg, model, params, doc = lm_setup
+    mgr = SessionManager(model, params, chunk_tokens=CHUNK,
+                         decode_bucket=CHUNK)
+    sid = mgr.add_session(doc)
+    mgr.submit(sid, len(doc), 2)
+    mgr.run()
+    new_doc = _apply_script(doc, script) % cfg.vocab_size
+    mgr.update_document(sid, new_doc)
+    L = max(len(new_doc) - 1, 2)
+    mgr.submit(sid, L, 4)
+    warm = mgr.run()[sid]
+
+    scratch = SessionManager(model, params, chunk_tokens=CHUNK,
+                             decode_bucket=CHUNK)
+    sid2 = scratch.add_session(new_doc)
+    scratch.submit(sid2, L, 4)
+    assert warm == scratch.run()[sid2], script
+
+
+@pytest.mark.slow
+def test_edit_mid_request_cancels_and_serves_new_text(lm_setup):
+    """update_document joins in-flight work: edit while a request is open."""
+    from repro.serve.session import SessionManager
+
+    cfg, model, params, doc = lm_setup
+    mgr = SessionManager(model, params, chunk_tokens=CHUNK,
+                         decode_bucket=CHUNK)
+    sid = mgr.add_session(doc)
+    mgr.submit(sid, len(doc), 8)
+    mgr.step()          # partially decoded: request still busy
+    new_doc = doc.copy()
+    new_doc[CHUNK] = (new_doc[CHUNK] + 1) % cfg.vocab_size
+    ep = mgr.update_document(sid, new_doc)
+    assert ep.divergence == CHUNK
+    assert not mgr.sessions[sid].busy
+    assert mgr.sched.edit_cancelled == 1
+    mgr.submit(sid, len(new_doc), 4)
+    warm = mgr.run()[sid]
+
+    scratch = SessionManager(model, params, chunk_tokens=CHUNK,
+                             decode_bucket=CHUNK)
+    sid2 = scratch.add_session(new_doc)
+    scratch.submit(sid2, len(new_doc), 4)
+    assert warm == scratch.run()[sid2]

@@ -161,3 +161,28 @@ def test_ragged_segment_hits_compile_per_bucket_not_per_length(setup):
         np.asarray(caches2[0]["p0"]["k"][:, :, :231]),
         np.asarray(ref2_caches[0]["p0"]["k"][:, :, :231]),
         rtol=1e-5, atol=1e-5)
+
+
+def test_edit_rebuild_adds_no_lowerings(setup):
+    """An edit-rebuild is suffix work over already-compiled shapes: the
+    rekeyed prefix enters through the shared insert executable and the
+    suffix fills through the same fused extend path, so serving an edited
+    document compiles nothing beyond the warm (bucket, chunk) set."""
+    cfg, model, params, docs = setup
+    doc = docs[2]
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=64)
+    sid = mgr.add_session(doc)
+    mgr.submit(sid, 256, 2)              # cold: compiles the executable set
+    mgr.run()
+    mgr.submit(sid, 256, 2)              # warm replay: compiles the insert
+    mgr.run()
+    before = dict(mgr.builder.lowerings)
+
+    new_doc = doc.copy()                 # chunk-aligned edit at 60% depth
+    new_doc[160] = (new_doc[160] + 1) % cfg.vocab_size
+    ep = mgr.update_document(sid, new_doc)
+    assert ep.action == "edit" and ep.reused_tokens >= 128
+    mgr.submit(sid, 256, 2)
+    mgr.run()
+    assert mgr.sessions[sid].stats.tokens_reused >= ep.reused_tokens
+    assert mgr.builder.lowerings == before, (before, mgr.builder.lowerings)

@@ -373,3 +373,63 @@ def test_report_quant_keys_zero_on_idle_manager():
     for key in ("quantized_segments", "quantized", "quant_bytes_saved",
                 "dequants"):
         assert key in rep and math.isfinite(rep[key]) and rep[key] == 0, key
+
+
+# ---------------------------------------------------------------------------
+# delta updates under quantized byte pressure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_edit_under_quantized_pressure_releases_orphans(tmp_path, lm_setup):
+    """Edit a served document while the store runs tiers + forced int8:
+    orphaned segments must leave every tier (spill files swept), survivors
+    stay plannable under the edited content key, and the stale document's
+    admission-prior stats die with it."""
+    import os
+
+    from repro.serve.session import SessionManager
+
+    model, params, doc = lm_setup
+    store = SegmentStore(seq_bucket=32, precision="int8",
+                         byte_budget=1 << 20, host_budget=1 << 20,
+                         spill_dir=tmp_path / "spill")
+    # decode materialization off: the generated-continuation fork is its
+    # own (still valid) document and would keep base segments alive under
+    # its key — this test isolates the *edit* lifecycle
+    mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
+                         store=store, decode_materialize=False)
+    sid = mgr.add_session(doc)
+    mgr.submit(sid, 128, 2, seed=5)
+    mgr.run()
+    old_id = mgr.sessions[sid].doc_id
+    assert store.quantized_segments() > 0
+
+    new_doc = doc.copy()
+    new_doc[64] = (new_doc[64] + 1) % int(doc.max() + 2)
+    ep = mgr.update_document(sid, new_doc)
+    assert ep.action == "edit" and ep.divergence == 64
+    new_id = mgr.sessions[sid].doc_id
+    # the old content key is fully forgotten: index, segments, priors
+    assert old_id not in store._indexes
+    assert old_id not in store._doc_stats
+    for seg in store._segs.values():
+        assert old_id not in seg.doc_ids()
+        rng = store.index(new_id).range_of(seg.seg_id)
+        assert rng.hi <= ep.divergence
+    # spill hygiene: after a drain, disk holds only live records' files
+    store.flush_saves()
+    live = {os.path.basename(str(s.spill["file"]))
+            for s in store._segs.values() if s.spill is not None}
+    spill_dir = tmp_path / "spill"
+    on_disk = set(os.listdir(spill_dir)) if spill_dir.is_dir() else set()
+    assert on_disk == live
+
+    # the edited document still serves, reusing the rekeyed int8 prefix
+    dequants_before = mgr.builder.dequants
+    mgr.submit(sid, 128, 2, seed=5)
+    out = mgr.run()[sid]
+    assert len(out) == 2
+    assert mgr.sessions[sid].stats.tokens_reused >= 32
+    assert mgr.builder.dequants > dequants_before
+    rep = mgr.report()
+    assert rep["edits"] == 1 and rep["rekeyed_segments"] > 0

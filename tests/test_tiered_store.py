@@ -457,3 +457,118 @@ def test_report_tier_keys_finite_on_idle_manager():
         assert key in rep, key
         assert math.isfinite(rep[key]), key
         assert rep[key] == 0, key
+
+
+# ---------------------------------------------------------------------------
+# delta updates: edits rekey survivors and release orphans from every tier
+# ---------------------------------------------------------------------------
+
+def _check_index_consistency(store):
+    """Every segment referenced by ≥1 index; every index entry resident."""
+    referenced = set()
+    for doc in store.doc_ids():
+        for sid, _ in store.index(doc).items():
+            assert sid in store._segs, (doc, sid)
+            referenced.add(sid)
+    assert referenced == set(store._segs)
+
+
+def _check_spill_files(store, spill_dir):
+    """After a drain, disk holds exactly the live spill records' files."""
+    store.flush_saves()
+    live = {os.path.basename(str(s.spill["file"]))
+            for s in store._segs.values() if s.spill is not None}
+    on_disk = ({p for p in os.listdir(spill_dir)}
+               if os.path.isdir(spill_dir) else set())
+    assert on_disk == live, (on_disk, live)
+
+
+def test_rekey_moves_prefix_and_transfers_doc_stats():
+    store = SegmentStore(seq_bucket=8)
+    sids = [store.put(Range(8 * i, 8 * i + 8), _seg(8, float(i)),
+                      doc_id="old")
+            for i in range(4)]
+    store.get(sids[0])
+    store.get(sids[0])
+    puts_hits = list(store._doc_stats["old"])
+    moved = store.rekey("old", "new", upto=16)
+    assert moved == 2
+    assert store.rekeys == 1 and store.rekeyed_segments == 2
+    assert {sid for sid, _ in store.index("new").items()} == set(sids[:2])
+    assert {sid for sid, _ in store.index("old").items()} == set(sids[2:])
+    for s in sids[:2]:
+        assert store._segs[s].doc_id == "new"
+    # admission-prior regression: the traffic history follows the document
+    # across the edit — no stale prior survives under the dead content key
+    assert "old" not in store._doc_stats
+    assert store._doc_stats["new"] == puts_hits
+    assert store.observed_reuses("old") == store.cost.expected_reuses
+
+
+def test_release_doc_drops_admission_prior_stats():
+    """The edit-lifecycle fix: releasing a document must forget its
+    priors, or stale fp32 pins outlive the segments they priced."""
+    store = SegmentStore(seq_bucket=8)
+    sid = store.put(Range(0, 8), _seg(8), doc_id="old")
+    for _ in range(8):
+        store.get(sid)
+    assert store.observed_reuses("old") > store.cost.expected_reuses
+    store.release_doc("old")
+    assert "old" not in store._doc_stats
+    assert store.observed_reuses("old") == store.cost.expected_reuses
+
+
+def test_edit_release_sweeps_every_tier(tmp_path):
+    store = _tiered(tmp_path, host_budget=NB8 + 1)
+    sids = [store.put(Range(8 * i, 8 * i + 8), _seg(8, float(i)),
+                      doc_id="old")
+            for i in range(5)]
+    store.flush_saves()
+    tiers = {s: store._segs[s].tier for s in sids}
+    assert set(tiers.values()) == {"device", "host", "disk"}
+    moved = store.rekey("old", "new", upto=16)
+    assert moved == 2
+    dropped = store.release_doc("old")
+    assert dropped == 3
+    # orphans are gone from every tier, survivors still serve
+    for s in sids[2:]:
+        assert s not in store
+    for i, s in enumerate(sids[:2]):
+        np.testing.assert_array_equal(np.asarray(store.get(s).caches["k"]),
+                                      np.asarray(_seg(8, float(i))["k"]))
+    assert "old" not in store._indexes and "old" not in store._doc_stats
+    _check_index_consistency(store)
+    _check_spill_files(store, tmp_path / "spill")
+
+
+def test_edit_fuzz_under_tiered_pressure(tmp_path):
+    """Randomized edit traffic against the store lifecycle: rekey at a
+    random divergence + release, under device/host pressure that scatters
+    segments across all three tiers.  No index may dangle and the spill
+    dir must hold exactly the live records' files after every edit."""
+    rng = np.random.default_rng(7)
+    store = _tiered(tmp_path, byte_budget=2 * NB8 + 1,
+                    host_budget=2 * NB8 + 1)
+    doc = "gen0"
+    length = 0
+    for step in range(12):
+        for _ in range(int(rng.integers(1, 4))):
+            store.put(Range(length, length + 8), _seg(8, float(step)),
+                      doc_id=doc)
+            length += 8
+        if rng.random() < 0.7 and length:
+            div = int(rng.integers(0, length + 1))
+            new = f"gen{step + 1}"
+            moved = store.rekey(doc, new, upto=div)
+            assert moved <= len(store)
+            store.release_doc(doc)
+            doc = new
+            # survivors are exactly the full buckets before the divergence
+            survive = {s for s, r in store.index(doc).items()}
+            assert all(store.index(doc).range_of(s).hi <= div
+                       for s in survive)
+            length = max((store.index(doc).range_of(s).hi
+                          for s in survive), default=0)
+        _check_index_consistency(store)
+        _check_spill_files(store, tmp_path / "spill")
+    assert store.rekeys > 0
