@@ -66,6 +66,10 @@ class CostModel:
     dequant_bytes_per_s: float = 2e10
     int8_bytes_ratio: float = 0.27
     fp32_pin_reuses: float = 4.0
+    # cross-shard wire (sharded serving): a remote segment fetch is one
+    # round trip plus a bandwidth term over the compressed wire payload.
+    wire_bytes_per_s: float = 2e9     # inter-shard link bandwidth
+    wire_rtt_s: float = 1e-3          # per-transfer round-trip latency
 
     def fetch_points(self, n: int) -> float:
         if n <= 0:
@@ -296,6 +300,36 @@ class CostModel:
         roundtrip = self.quantize_s(nbytes) + exp * self.dequantize_s(nbytes)
         saved = exp * self.recompute_s(n) * (1.0 - self.int8_bytes_ratio)
         return "int8" if roundtrip < saved else "fp32"
+
+    # -- cross-shard fetch -------------------------------------------------
+    def fetch_s(self, nbytes: int, *, bw: Optional[float] = None,
+                rtt: Optional[float] = None) -> float:
+        """Seconds to ship an ``nbytes`` wire payload from a remote shard:
+        one round trip plus the bandwidth term.  The distributed C(M) —
+        same shape as :meth:`use_model`, with the link replacing the
+        local load path.  ``bw``/``rtt`` override the calibrated link
+        (a transport that has *observed* a straggling shard passes its
+        degraded estimate here).
+
+        >>> cm = CostModel()
+        >>> round(cm.fetch_s(2_000_000), 4)   # 1ms RTT + 1ms at 2 GB/s
+        0.002
+        """
+        bw = self.wire_bytes_per_s if bw is None else bw
+        rtt = self.wire_rtt_s if rtt is None else rtt
+        return rtt + nbytes / bw
+
+    def fetch_action(self, n: int, nbytes: int, *,
+                     bw: Optional[float] = None,
+                     rtt: Optional[float] = None) -> str:
+        """Arbitrate a remote segment: ``"fetch"`` the ``nbytes`` wire
+        payload, or ``"rebuild"`` its ``n`` tokens locally at ``F(n)``.
+        The fetch side pays the transfer plus the dequantize pass the
+        int8 wire payload needs before reuse — remote-fetch, local-
+        rebuild, and miss are then priced in one F/C vocabulary.
+        """
+        fetch = self.fetch_s(nbytes, bw=bw, rtt=rtt) + self.dequantize_s(nbytes)
+        return "fetch" if fetch < self.recompute_s(n) else "rebuild"
 
 
 def serve_cost_model(*, prefill_s_per_token: float = 1e-4,

@@ -11,14 +11,21 @@ Used in two forms:
   * pure functions (unit-tested convergence on a quadratic),
   * ``grad_transform`` inside the multi-pod train step, where the psum runs
     over the manual ``pod`` axis of a ``shard_map`` (data/model stay auto).
+
+The sharded segment store rides the same module for its wire payloads:
+``pack_arrays``/``unpack_arrays`` turn a named-array dict (a segment's
+``leaf_*`` tensors plus ``qscale_*`` sidecars) into one zlib-compressed
+byte string — the snapshot entry format, reused as the transfer format.
 """
 from __future__ import annotations
 
 import functools
+import io
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -84,3 +91,29 @@ def compressed_bytes(grads) -> int:
 
 def raw_bytes(grads) -> int:
     return sum(x.size * jnp.dtype(jnp.float32).itemsize for x in jax.tree.leaves(grads))
+
+
+# -- segment wire payloads ---------------------------------------------------
+
+def pack_arrays(arrays: dict) -> bytes:
+    """Serialize a named-array payload into one compressed byte string.
+
+    This is the cross-shard wire format for segment bodies: the same
+    ``leaf_*``/``qscale_*`` array dict the snapshot writer persists, as
+    ``np.savez_compressed`` (zlib DEFLATE) bytes.  Int8-quantized leaves
+    compress on top of their 4x dtype shrink; zero-length valid tails
+    and 0-d scale arrays are preserved exactly.
+    """
+    buf = io.BytesIO()
+    np.savez_compressed(buf, **{k: np.asarray(v) for k, v in arrays.items()})
+    return buf.getvalue()
+
+
+def unpack_arrays(data: bytes):
+    """Inverse of :func:`pack_arrays`.
+
+    Returns an ``NpzFile`` (mapping with ``.files``), the same handle
+    shape the snapshot loader consumes — a received wire payload and a
+    snapshot entry file are interchangeable at the deserialize seam.
+    """
+    return np.load(io.BytesIO(data))

@@ -56,10 +56,18 @@ class StragglerDetector:
         self._count[host] = self._count.get(host, 0) + 1
 
     def fleet_median(self) -> float:
+        """Lower median of per-host EWMAs.
+
+        The *lower* middle element matters for even fleet sizes: the
+        upper median (``vals[len // 2]``) lets a single slow host drag
+        the threshold past itself — with two hosts the slow one *is*
+        the upper median, so ``v > factor * med`` could never fire and
+        a 2-shard deployment was blind to its own straggler.
+        """
         vals = sorted(self._ewma.values())
         if not vals:
             return 0.0
-        return vals[len(vals) // 2]
+        return vals[(len(vals) - 1) // 2]
 
     def stragglers(self) -> list[str]:
         med = self.fleet_median()

@@ -33,6 +33,18 @@ directory compactly on exit:
       --doc-len 1024 --sessions 4 --requests 2 --byte-budget 50000000 \
       --host-budget 500000000 --spill-dir /tmp/kvspill --store-dir /tmp/kvstore
 
+Sharded serving: ``--shards N`` spreads the store over N consistent-hash
+shards (simulated in-process hosts, each with its own device/host/disk
+tiers at the configured per-shard budgets).  Documents homed on a remote
+shard are fetched over a simulated wire (``--shard-bw``/``--shard-rtt``),
+coalesced one transfer per shard per scheduler tick, int8-quantized and
+deflated on the wire; fetches past ``--hedge-deadline`` race a backup
+local rebuild (first done wins):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-67b --reduced \
+      --doc-len 1024 --sessions 4 --requests 2 --shards 2 \
+      --byte-budget 50000000
+
 Edit traffic: ``--edit-every N`` mutates each session's document after
 every N request rounds (insert/delete/replace at a random offset) and
 serves the edited text via the delta-update path — stored segments before
@@ -78,6 +90,22 @@ def _load_store(args, budget, tiers):
     """
     if not args.store_dir:
         return None
+    if args.shards > 1:
+        from repro.serve.shard_store import ShardedSegmentStore
+
+        try:
+            store = ShardedSegmentStore.load(
+                args.store_dir, n_shards=args.shards, byte_budget=budget,
+                policy=args.eviction_policy,
+                bw_bytes_per_s=args.shard_bw, rtt_s=args.shard_rtt,
+                hedge_deadline_s=args.hedge_deadline, **tiers)
+        except (FileNotFoundError, IOError):
+            return None   # no snapshot yet: first run populates it
+        print(f"warm start: reloaded {store.total_segments()} segments "
+              f"({store.total_nbytes()/1e6:.1f} MB, "
+              f"{len(store.doc_ids())} documents, {store.n_shards} shards) "
+              f"from {args.store_dir}")
+        return store
     from repro.serve.kv_cache import SegmentStore
 
     try:
@@ -101,8 +129,21 @@ def _make_store(args, budget, seq_bucket):
     """
     tiers = _tier_kwargs(args)
     store = _load_store(args, budget, tiers)
-    if store is not None or not tiers:
+    if store is not None:
         return store
+    if args.shards > 1:
+        # sharded serving always constructs here: shard count, wire
+        # calibration, and hedging are store-creation parameters
+        from repro.core.cost import serve_cost_model
+        from repro.serve.shard_store import ShardedSegmentStore
+
+        return ShardedSegmentStore(
+            args.shards, byte_budget=budget, cost_model=serve_cost_model(),
+            policy=args.eviction_policy, seq_bucket=seq_bucket,
+            bw_bytes_per_s=args.shard_bw, rtt_s=args.shard_rtt,
+            hedge_deadline_s=args.hedge_deadline, **tiers)
+    if not tiers:
+        return None
     from repro.core.cost import serve_cost_model
     from repro.serve.kv_cache import SegmentStore
 
@@ -158,6 +199,35 @@ def _print_tier_report(store, args) -> None:
               f"errors {len(store.save_errors)}")
 
 
+def _print_shard_report(st) -> None:
+    """Per-shard occupancy and fetch-traffic lines (sharded stores only;
+    the smoke test regexes these)."""
+    if not hasattr(st, "shard_summaries"):
+        return
+    rep = st.shard_report()
+    print(f"  fetch traffic ({rep['shards']} shards): "
+          f"{rep['remote_fetches']} segments fetched "
+          f"({rep['remote_fetch_wire_bytes']/1e6:.1f} MB wire) over "
+          f"{rep['remote_transfers']} transfers, "
+          f"{rep['fetched_hits']} fetched hits, "
+          f"{rep['on_demand_fetches']} on-demand, "
+          f"{rep['coalesce_violations']} coalesce violations")
+    print(f"  hedging: {rep['hedged_fetches']} hedged "
+          f"({rep['hedge_rebuild_wins']} rebuild wins, "
+          f"{rep['hedge_fetch_wins']} fetch wins, "
+          f"{rep['cancelled_fetches']} fetches cancelled), "
+          f"{rep['dead_shard_skips']} dead-shard skips, "
+          f"{rep['put_forwards']} put-forwards "
+          f"({rep['put_forward_bytes']/1e6:.1f} MB)")
+    for s in st.shard_summaries():
+        print(f"  shard {s['shard']}: {s['segments']} segments, "
+              f"device {s['device_bytes']/1e6:.1f} MB, "
+              f"host {s['host_bytes']/1e6:.1f} MB, "
+              f"disk {s['disk_bytes']/1e6:.1f} MB, "
+              f"{s['hits']} hits, {s['evictions']} evictions, "
+              f"{s['docs']} docs")
+
+
 def _extras(cfg):
     extras = {}
     if cfg.encoder_layers:
@@ -204,6 +274,7 @@ def run_single(args, cfg, model, params, rng) -> None:
           f"decode {s.decode_s:.2f}s, store {len(eng.store)} segments "
           f"({eng.store.nbytes()/1e6:.1f} MB)")
     _print_tier_report(eng.store, args)
+    _print_shard_report(eng.store)
 
 
 def run_multi(args, cfg, model, params, rng) -> None:
@@ -295,6 +366,7 @@ def run_multi(args, cfg, model, params, rng) -> None:
               f"reused {edit_reused}/{tot} planned tokens "
               f"({edit_reused / tot if tot else 0.0:.1%})")
     _print_tier_report(st, args)
+    _print_shard_report(st)
     if args.store_dir and st.last_save:
         print(f"  snapshot: {st.last_save['written']} entries written, "
               f"{st.last_save['reused']} reused from the previous snapshot")
@@ -378,6 +450,24 @@ def main() -> None:
                          "pre-precision behavior, also via "
                          "REPRO_SEGMENT_PRECISION=fp32), 'int8' quantizes "
                          "every admitted segment")
+    ap.add_argument("--shards", type=int, default=1,
+                    help=">1 spreads the segment store over N consistent-"
+                         "hash shards (simulated in-process hosts); "
+                         "--byte-budget/--host-budget/--spill-dir apply "
+                         "per shard, and remote-homed documents are served "
+                         "by coalesced, hedged wire fetches")
+    ap.add_argument("--shard-bw", type=float, default=2e9,
+                    help="simulated cross-shard wire bandwidth in bytes/s "
+                         "(calibrates both the cost model's fetch pricing "
+                         "and the transport's transfer clock)")
+    ap.add_argument("--shard-rtt", type=float, default=1e-3,
+                    help="simulated cross-shard round-trip latency in "
+                         "seconds (amortized across a coalesced batch)")
+    ap.add_argument("--hedge-deadline", type=float, default=None,
+                    help="estimated-fetch-seconds threshold past which a "
+                         "remote fetch races a backup local rebuild, first "
+                         "done wins (default honors REPRO_HEDGE_DEADLINE, "
+                         "then 0.05)")
     ap.add_argument("--background-saves", dest="background_saves",
                     action="store_true", default=True,
                     help="run --snapshot-every saves on the background "

@@ -145,6 +145,10 @@ class PrefixCacheBuilder:
         #: segments dequantized on the reuse path (int8 residents whose
         #: payload was reconstructed before entering the jitted insert)
         self.dequants = 0
+        #: reuse steps served from a cross-shard fetch (the sharded
+        #: store marks transient fetched segments; a plain store never
+        #: sets the flag, so this stays 0 off the sharded path)
+        self.fetched_segments = 0
         self._jit_prefill = jax.jit(self._counted(model.prefill, "prefill"))
         self._jit_extend = jax.jit(self._counted(model.prefill_extend, "extend"))
         self._jit_extend_many = jax.jit(
@@ -161,6 +165,8 @@ class PrefixCacheBuilder:
         codes would silently insert garbage magnitudes.  The store copy
         stays quantized; only this plan's working cache pays fp32 bytes.
         """
+        if getattr(seg, "fetched", False):
+            self.fetched_segments += 1
         if seg.precision != "int8" or seg.quant is None:
             return seg.caches
         from repro.core.quant import dequantize_tree

@@ -767,9 +767,12 @@ class SegmentStore(PinnedStore):
         self.demoted_bytes += nb
 
     def _spill_path(self, seg_id: str) -> Path:
+        # sha256, not sha1 or hash(): spill names must be stable across
+        # processes (restart recovery) and across shard hosts (snapshot
+        # dirs move between them), like every content key in the store
         d = self.spill_dir
         d.mkdir(parents=True, exist_ok=True)
-        return d / f"seg-{hashlib.sha1(seg_id.encode()).hexdigest()[:20]}.npz"
+        return d / f"seg-{hashlib.sha256(seg_id.encode()).hexdigest()[:20]}.npz"
 
     def _segment_record(self, seg: StoredSegment, spec) -> dict:
         """The immutable manifest record — shared by snapshot entries and
@@ -1160,3 +1163,30 @@ class SegmentStore(PinnedStore):
                             admit_prior=admit_prior, host_budget=host_budget,
                             spill_dir=spill_dir, tier_policy=tier_policy,
                             precision=precision, writer=writer)
+
+
+def segment_from_record(rec: dict, arrays) -> StoredSegment:
+    """Materialize a *transient* device-resident segment from the npz
+    entry format — the receiving half of the cross-shard wire (the
+    sending half is :meth:`SegmentStore._serialize_entry`'s record plus
+    ``_payload_arrays``).  The segment belongs to no store: it is not
+    admitted, budgeted, or indexed — the sharded facade parks it in its
+    fetch cache for the plan that requested it, and the reuse path
+    dequantizes int8 payloads exactly as it does for residents.
+    """
+    n_leaf = sum(1 for k in arrays.files if k.startswith("leaf_"))
+    leaves = [arrays[f"leaf_{j}"] for j in range(n_leaf)]
+    caches = unflatten_tree(rec["tree"], leaves, leaf_fn=jnp.asarray)
+    seg = StoredSegment(rec["seg_id"], Range(int(rec["lo"]), int(rec["hi"])),
+                        caches, doc_id=rec.get("doc_id", DEFAULT_DOC),
+                        valid=int(rec["valid"]),
+                        capacity=int(rec["capacity"]))
+    if rec.get("precision") == "int8":
+        qm = rec.get("quant", {})
+        scales = {k[len("qscale_"):]: jnp.asarray(arrays[k])
+                  for k in arrays.files if k.startswith("qscale_")}
+        seg.precision = "int8"
+        seg.quant = QuantMeta(block=int(qm.get("block", 0) or 1),
+                              scales=scales,
+                              dtypes=dict(qm.get("dtypes", {})))
+    return seg

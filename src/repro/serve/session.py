@@ -71,8 +71,12 @@ def doc_key(doc_tokens: np.ndarray, extras: Optional[dict] = None) -> str:
     prefill produces — cross-attention constants are baked into cached
     segments — so they are part of document identity: same tokens with
     different extras must NOT share segments.
+
+    sha256 (like every content key): the sharded store's consistent-hash
+    ring places documents by this id, so it must be identical across
+    processes and hosts regardless of ``PYTHONHASHSEED``.
     """
-    h = hashlib.sha1(np.ascontiguousarray(doc_tokens, np.int32).tobytes())
+    h = hashlib.sha256(np.ascontiguousarray(doc_tokens, np.int32).tobytes())
     for k in sorted(extras or {}):
         h.update(k.encode())
         h.update(np.ascontiguousarray(extras[k]).tobytes())
@@ -410,6 +414,24 @@ class SessionManager:
         s.plans.append(plan)
         s.stats.requests += 1
         return plan
+
+    def submit_many(self, reqs, *, greedy: bool = True) -> list[Plan]:
+        """Admit one scheduler tick's worth of requests together.
+
+        ``reqs`` is ``[(sid, prefix_len, n_new, seed), ...]``.  Against a
+        sharded store this is the cross-document coalescing point: every
+        document's remote segments are resolved in **one** transport tick
+        up front (at most one batched transfer per contacted shard), so
+        the per-request prefetch inside :meth:`submit` finds its payloads
+        already in the fetch cache and ships nothing.  Against a plain
+        store it is just the submit loop.
+        """
+        batch = getattr(self.store, "prefetch_batch", None)
+        if batch is not None:
+            batch([(self.sessions[sid].doc_id, prefix_len)
+                   for sid, prefix_len, _, _ in reqs])
+        return [self.submit(sid, prefix_len, n_new, greedy=greedy, seed=seed)
+                for sid, prefix_len, n_new, seed in reqs]
 
     # -- delta updates (document edits) ------------------------------------
     def update_document(self, sid: int, new_tokens: np.ndarray):
@@ -804,6 +826,35 @@ class SessionManager:
             "quantized": st.quantized,
             "quant_bytes_saved": st.quant_bytes_saved,
             "dequants": self.builder.dequants,
+            # sharded serving: per-shard occupancy and cross-shard fetch
+            # traffic.  A plain store reports the degenerate single-shard
+            # shape (same keys, zero fetch traffic), so consumers never
+            # branch on store type; every value is a finite counter and
+            # the idle-guard holds across shards.
+            "fetched_segments": self.builder.fetched_segments,
+            **(st.shard_report() if hasattr(st, "shard_report") else {
+                "shards": 1,
+                "remote_fetches": 0,
+                "remote_fetch_wire_bytes": 0,
+                "fetched_hits": 0,
+                "on_demand_fetches": 0,
+                "hedged_fetches": 0,
+                "hedge_rebuild_wins": 0,
+                "hedge_fetch_wins": 0,
+                "cancelled_fetches": 0,
+                "dead_shard_skips": 0,
+                "put_forwards": 0,
+                "put_forward_bytes": 0,
+                "cross_shard_alias_skips": 0,
+                "cross_shard_rekeys": 0,
+                "remote_transfers": 0,
+                "remote_fetch_items": 0,
+                "remote_fetch_bytes": 0,
+                "fetch_ticks": 0,
+                "coalesce_violations": 0,
+                "max_transfers_per_shard_tick": 0,
+                "sim_transfer_s": 0.0,
+            }),
         }
 
 

@@ -13,8 +13,10 @@ from repro.distributed.compression import (
     dequantize_int8,
     ef_compress,
     ef_state_like,
+    pack_arrays,
     quantize_int8,
     raw_bytes,
+    unpack_arrays,
 )
 from repro.distributed.fault import (
     HeartbeatMonitor,
@@ -119,6 +121,56 @@ class TestCompression:
         assert ef["w"].dtype == jnp.float32
 
 
+class TestWirePayloads:
+    """``pack_arrays``/``unpack_arrays`` carry the sharded store's wire
+    payloads: bucket-shaped KV leaves (padded to capacity), int8 bodies
+    with their ``qscale_`` sidecars, mixed dtypes, and degenerate shapes."""
+
+    def test_roundtrip_bucket_shaped_segment_payload(self):
+        rng = np.random.default_rng(0)
+        arrays = {
+            # two padded KV leaves as a quantized segment ships them
+            "leaf_0": rng.integers(-128, 128, (1, 1, 32, 2, 8)).astype(np.int8),
+            "leaf_1": rng.integers(-128, 128, (1, 1, 32, 2, 8)).astype(np.int8),
+            "qscale_0": rng.random((1, 1, 4, 2, 8)).astype(np.float32),
+            "qscale_1": rng.random((1, 1, 4, 2, 8)).astype(np.float32),
+        }
+        out = unpack_arrays(pack_arrays(arrays))
+        assert sorted(out.files) == sorted(arrays)
+        for k, v in arrays.items():
+            assert out[k].dtype == v.dtype, k
+            np.testing.assert_array_equal(out[k], v)
+
+    def test_roundtrip_mixed_dtypes(self):
+        arrays = {
+            "leaf_0": np.arange(24, dtype=np.float32).reshape(2, 3, 4),
+            "leaf_1": np.arange(6, dtype=np.int32),
+            "leaf_2": np.asarray(jnp.full((2, 2), 1.5, jnp.float32)),
+        }
+        out = unpack_arrays(pack_arrays(arrays))
+        for k, v in arrays.items():
+            assert out[k].dtype == v.dtype
+            np.testing.assert_array_equal(out[k], v)
+
+    def test_roundtrip_zero_length_and_scalar(self):
+        """A fully-invalid tail pads to a zero-length valid region; the
+        codec must not choke on empty or 0-d arrays."""
+        arrays = {
+            "leaf_0": np.zeros((1, 1, 0, 2, 4), np.float32),
+            "leaf_1": np.float32(3.25),
+        }
+        out = unpack_arrays(pack_arrays(arrays))
+        assert out["leaf_0"].shape == (1, 1, 0, 2, 4)
+        assert float(out["leaf_1"]) == 3.25
+
+    def test_padded_payload_deflates(self):
+        """Bucket padding is mostly zeros: the wire frame must come in
+        well under the raw bytes (savez_compressed actually deflates)."""
+        x = np.zeros((1, 1, 128, 2, 64), np.float32)
+        x[..., :5, :, :] = 1.0
+        assert len(pack_arrays({"leaf_0": x})) < x.nbytes / 10
+
+
 class TestFault:
     def test_heartbeat(self):
         hb = HeartbeatMonitor(timeout_s=10.0)
@@ -134,6 +186,63 @@ class TestFault:
                 sd.observe(h, 1.0)
             sd.observe("slow", 5.0)
         assert sd.stragglers() == ["slow"]
+
+    def test_heartbeat_revival_and_unknown_hosts(self):
+        """Injected clocks only: a dead host that beats again reads alive,
+        and hosts that never beat are in neither list."""
+        hb = HeartbeatMonitor(timeout_s=10.0)
+        hb.beat("h0", t=0.0)
+        assert hb.dead(now=11.0) == ["h0"]
+        hb.beat("h0", t=12.0)
+        assert hb.dead(now=13.0) == [] and hb.alive(now=13.0) == ["h0"]
+        assert "ghost" not in hb.alive(now=13.0) + hb.dead(now=13.0)
+
+    def test_heartbeat_boundary_is_exclusive(self):
+        hb = HeartbeatMonitor(timeout_s=10.0)
+        hb.beat("h0", t=0.0)
+        assert hb.alive(now=10.0) == ["h0"]     # exactly at timeout: alive
+        assert hb.dead(now=10.0 + 1e-9) == ["h0"]
+
+    def test_two_host_straggler_flagged(self):
+        """Regression for the fleet-median bug: with an even fleet the old
+        *upper* median let a slow host drag the threshold past itself —
+        a 2-shard deployment could never flag its own straggler."""
+        sd = StragglerDetector(factor=2.0, min_samples=3)
+        for _ in range(5):
+            sd.observe("fast", 1.0)
+            sd.observe("slow", 10.0)
+        assert sd.fleet_median() == 1.0          # lower middle element
+        assert sd.stragglers() == ["slow"]
+
+    def test_fleet_median_is_lower_middle(self):
+        sd = StragglerDetector()
+        for host, v in (("a", 1.0), ("b", 2.0), ("c", 3.0), ("d", 9.0)):
+            sd.observe(host, v)
+        assert sd.fleet_median() == 2.0
+        assert StragglerDetector().fleet_median() == 0.0
+
+    def test_straggler_needs_min_samples(self):
+        sd = StragglerDetector(factor=2.0, min_samples=3)
+        for _ in range(3):
+            sd.observe("fast", 1.0)
+        sd.observe("slow", 50.0)
+        sd.observe("slow", 50.0)
+        assert sd.stragglers() == []             # two samples: not yet
+        sd.observe("slow", 50.0)
+        assert sd.stragglers() == ["slow"]
+
+    def test_straggler_ewma_recovers(self):
+        """A host that was slow and then recovers must eventually unflag —
+        the EWMA forgets, it does not brand for life."""
+        sd = StragglerDetector(alpha=0.5, factor=2.0, min_samples=3)
+        for _ in range(4):
+            sd.observe("fast", 1.0)
+            sd.observe("was-slow", 20.0)
+        assert sd.stragglers() == ["was-slow"]
+        for _ in range(10):
+            sd.observe("fast", 1.0)
+            sd.observe("was-slow", 1.0)
+        assert sd.stragglers() == []
 
     def test_elastic_mesh_plan(self):
         assert plan_elastic_mesh(64, 4, 16) == (16, 16)   # full pod

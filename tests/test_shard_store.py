@@ -1,0 +1,470 @@
+"""Sharded segment store: ring placement, wire codec, coalesced + hedged
+fetch, cross-shard lifecycle (rekey/alias/pins), persistence, reporting."""
+import math
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cost import CostModel, serve_cost_model
+from repro.core.descriptors import Range
+from repro.core.quant import dequantize_tree
+from repro.distributed.transport import ShardTransport
+from repro.serve.kv_cache import SegmentStore
+from repro.serve.shard_store import (
+    HashRing,
+    ShardedSegmentStore,
+    decode_segment,
+    encode_segment,
+    resolve_wire_precision,
+)
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def _seg(tokens, fill=1.0, width=4):
+    return {"k": jnp.full((1, 1, tokens, 2, width), fill, jnp.float32)}
+
+
+def _rand_seg(rng, tokens, width=4):
+    return {"k": jnp.asarray(
+        rng.standard_normal((1, 1, tokens, 2, width)).astype(np.float32))}
+
+
+def _sharded(n=2, **kw):
+    kw.setdefault("cost_model", serve_cost_model())
+    kw.setdefault("seq_bucket", 8)
+    # low RTT so bucket-sized test segments price as fetch-worthy; the
+    # economics themselves are covered by the CostModel tests below
+    kw.setdefault("rtt_s", 1e-7)
+    return ShardedSegmentStore(n, **kw)
+
+
+def _doc_on(st, shard, *, skip=0):
+    """A doc id the ring homes on ``shard`` (deterministic scan)."""
+    found = 0
+    for i in range(10_000):
+        d = f"doc-{i}"
+        if st.shard_of(d) == shard:
+            if found == skip:
+                return d
+            found += 1
+    raise AssertionError(f"no doc id found for shard {shard}")
+
+
+# ---------------------------------------------------------------------------
+# hash ring
+# ---------------------------------------------------------------------------
+
+class TestHashRing:
+    def test_deterministic_across_instances(self):
+        a, b = HashRing(4), HashRing(4)
+        keys = [f"k{i}" for i in range(200)]
+        assert [a.place(k) for k in keys] == [b.place(k) for k in keys]
+
+    def test_distribution_roughly_uniform(self):
+        ring = HashRing(4)
+        counts = [0] * 4
+        for i in range(2000):
+            counts[ring.place(f"key-{i}")] += 1
+        # virtual nodes keep every shard within a loose band of fair share
+        assert min(counts) > 2000 // 4 * 0.5, counts
+        assert max(counts) < 2000 // 4 * 1.6, counts
+
+    def test_single_shard_takes_everything(self):
+        ring = HashRing(1)
+        assert {ring.place(f"k{i}") for i in range(50)} == {0}
+
+    def test_growth_moves_minority_of_keys(self):
+        r4, r5 = HashRing(4), HashRing(5)
+        keys = [f"k{i}" for i in range(2000)]
+        moved = sum(r4.place(k) != r5.place(k) for k in keys)
+        # consistent hashing: ~1/5 of keys move when a 5th shard joins
+        # (modular hashing would move ~4/5)
+        assert moved < 2000 * 0.4, moved
+
+    @pytest.mark.slow
+    def test_placement_independent_of_pythonhashseed(self):
+        """Regression: placement must agree across processes no matter the
+        interpreter's hash randomization — a str(hash())-based ring would
+        scatter a document's home shard per process."""
+        code = (
+            "import sys; sys.path.insert(0, %r)\n"
+            "import numpy as np\n"
+            "from repro.serve.session import doc_key\n"
+            "from repro.serve.shard_store import HashRing\n"
+            "ring = HashRing(4)\n"
+            "for i in range(6):\n"
+            "    doc = np.arange(16 + i, dtype=np.int32)\n"
+            "    k = doc_key(doc, {})\n"
+            "    print(k, ring.place(k), ring.place(f'raw-{i}'))\n"
+        ) % str(SRC)
+        outs = []
+        for seed in ("0", "42"):
+            proc = subprocess.run(
+                [sys.executable, "-c", code], capture_output=True, text=True,
+                env={**os.environ, "PYTHONHASHSEED": seed})
+            assert proc.returncode == 0, proc.stderr
+            outs.append(proc.stdout)
+        assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# cost model: fetch pricing
+# ---------------------------------------------------------------------------
+
+class TestFetchPricing:
+    def test_fetch_s_is_rtt_plus_wire(self):
+        cm = CostModel()
+        assert cm.fetch_s(2_000_000) == pytest.approx(
+            cm.wire_rtt_s + 2_000_000 / cm.wire_bytes_per_s)
+        assert cm.fetch_s(0, rtt=0.5, bw=1.0) == pytest.approx(0.5)
+
+    def test_fetch_action_prefers_wire_for_big_rebuilds(self):
+        cm = serve_cost_model()
+        # hundreds of tokens vs a few MB on a fast wire: fetch wins
+        assert cm.fetch_action(512, 4_000_000) == "fetch"
+        # a bucket's worth of tokens is cheaper to recompute than one RTT
+        assert cm.fetch_action(8, 256) == "rebuild"
+        # a dead-slow wire flips even the big transfer back to rebuild
+        assert cm.fetch_action(512, 4_000_000, bw=1e4) == "rebuild"
+
+
+# ---------------------------------------------------------------------------
+# wire codec
+# ---------------------------------------------------------------------------
+
+class TestWireCodec:
+    def test_fp32_resident_quantizes_to_int8_within_scale(self):
+        st = SegmentStore(seq_bucket=8, precision="fp32")
+        rng = np.random.default_rng(3)
+        caches = _rand_seg(rng, 8)
+        sid = st.put(Range(0, 8), caches, doc_id="d")
+        out = decode_segment(encode_segment(st, st.get(sid)))
+        assert out.precision == "int8" and out.quant is not None
+        assert out.seg_id == sid and out.doc_id == "d"
+        assert (out.rng.lo, out.rng.hi, out.valid) == (0, 8, 8)
+        deq = dequantize_tree(out.caches, out.quant)
+        scale = max(float(jnp.max(s)) for s in out.quant.scales.values())
+        err = float(jnp.max(jnp.abs(deq["k"] - st.get(sid).caches["k"])))
+        assert err <= scale / 2 + 1e-6
+
+    def test_fp32_wire_precision_is_lossless(self):
+        st = SegmentStore(seq_bucket=8, precision="fp32")
+        rng = np.random.default_rng(4)
+        caches = _rand_seg(rng, 8)
+        sid = st.put(Range(0, 8), caches, doc_id="d")
+        out = decode_segment(encode_segment(st, st.get(sid),
+                                            precision="fp32"))
+        assert out.precision == "fp32" and out.quant is None
+        np.testing.assert_array_equal(np.asarray(out.caches["k"]),
+                                      np.asarray(st.get(sid).caches["k"]))
+
+    def test_int8_resident_ships_exactly(self):
+        st = SegmentStore(seq_bucket=8, precision="int8")
+        rng = np.random.default_rng(5)
+        sid = st.put(Range(0, 8), _rand_seg(rng, 8), doc_id="d")
+        seg = st.get(sid)
+        out = decode_segment(encode_segment(st, seg))
+        assert out.precision == "int8"
+        np.testing.assert_array_equal(np.asarray(out.caches["k"]),
+                                      np.asarray(seg.caches["k"]))
+        for k, s in seg.quant.scales.items():
+            np.testing.assert_array_equal(np.asarray(out.quant.scales[k]),
+                                          np.asarray(s))
+
+    def test_partial_bucket_valid_tail_survives(self):
+        st = SegmentStore(seq_bucket=8, precision="fp32")
+        sid = st.put(Range(0, 5), _seg(5, 2.0), doc_id="d")  # pads to 8
+        out = decode_segment(encode_segment(st, st.get(sid)))
+        assert out.valid == 5 and out.capacity == 8
+        assert out.rng.hi == 5
+
+    def test_resolve_wire_precision(self, monkeypatch):
+        assert resolve_wire_precision("fp32") == "fp32"
+        assert resolve_wire_precision() == "int8"
+        monkeypatch.setenv("REPRO_WIRE_PRECISION", "fp32")
+        assert resolve_wire_precision() == "fp32"
+        with pytest.raises(ValueError, match="wire precision"):
+            resolve_wire_precision("fp16")
+
+
+# ---------------------------------------------------------------------------
+# facade routing
+# ---------------------------------------------------------------------------
+
+class TestRouting:
+    def test_put_routes_to_home_shard(self):
+        st = _sharded(2)
+        local, remote = _doc_on(st, 0), _doc_on(st, 1)
+        s0 = st.put(Range(0, 8), _seg(8), doc_id=local)
+        s1 = st.put(Range(0, 8), _seg(8, 2.0), doc_id=remote)
+        assert s0 in st._segs and s1 not in st._segs
+        assert s1 in st.remotes[0]._segs
+        assert s0 in st and s1 in st            # __contains__ spans shards
+        assert st.put_forwards == 1 and st.put_forward_bytes > 0
+        assert st.total_segments() == 2
+        assert sorted(st.doc_ids()) == sorted([local, remote])
+
+    def test_single_shard_facade_is_plain_store(self):
+        st = _sharded(1)
+        sid = st.put(Range(0, 8), _seg(8), doc_id="anything")
+        assert sid in st._segs and st.put_forwards == 0
+        assert st.transport.transfers == 0
+        assert len(list(st.index("anything").items())) == 1
+
+    def test_remote_get_is_an_on_demand_fetch(self):
+        st = _sharded(2)
+        remote = _doc_on(st, 1)
+        sid = st.put(Range(0, 8), _seg(8, 3.0), doc_id=remote)
+        seg = st.get(sid)
+        assert st.on_demand_fetches == 1 and st.fetched_hits == 1
+        assert st.transport.transfers == 1
+        assert getattr(seg, "fetched", False)
+        # a second get serves from the fetch cache, no new transfer
+        st.get(sid)
+        assert st.transport.transfers == 1 and st.fetched_hits == 2
+
+    def test_remote_index_filters_through_fetch_pricing(self):
+        st = _sharded(2)
+        remote = _doc_on(st, 1)
+        st.put(Range(0, 8), _seg(8), doc_id=remote)
+        assert len(list(st.index(remote).items())) == 1
+        assert st.segment_bytes(remote)  # priced in equivalent local bytes
+        nofetch = _sharded(2, fetch=False)
+        nofetch.put(Range(0, 8), _seg(8), doc_id=remote)
+        assert list(nofetch.index(remote).items()) == []
+        assert nofetch.segment_bytes(remote) == {}
+
+    def test_cross_shard_alias_is_skipped(self):
+        st = _sharded(4)
+        src = _doc_on(st, 1)
+        dst = next(d for d in (f"doc-{i}" for i in range(10_000))
+                   if st.shard_of(d) != 1)
+        st.put(Range(0, 8), _seg(8), doc_id=src)
+        assert st.alias(src, dst) == 0
+        assert st.cross_shard_alias_skips == 1
+
+    def test_same_home_alias_and_release_route(self):
+        st = _sharded(2)
+        src = _doc_on(st, 1)
+        dst = _doc_on(st, 1, skip=1)
+        st.put(Range(0, 8), _seg(8), doc_id=src)
+        assert st.alias(src, dst) == 1
+        assert len(list(st.remotes[0].index(dst).items())) == 1
+        assert st.release_doc(dst) == 0     # alias release keeps the segment
+        assert st.release_doc(src) == 1
+        assert st.total_segments() == 0
+
+    def test_cross_shard_rekey_migrates_segments(self):
+        st = _sharded(2)
+        old = _doc_on(st, 1)
+        new = _doc_on(st, 0)
+        a = st.put(Range(0, 8), _seg(8, 1.0), doc_id=old)
+        b = st.put(Range(8, 16), _seg(8, 2.0), doc_id=old)
+        c = st.put(Range(16, 24), _seg(8, 3.0), doc_id=old)
+        moved = st.rekey(old, new, upto=16)
+        assert moved == 2
+        assert a in st._segs and b in st._segs      # migrated to shard 0
+        assert c in st.remotes[0]._segs             # past-divergence stays
+        assert st._segs[a].doc_id == new
+        assert {s for s, _ in st.index(new).items()} == {a, b}
+        assert st.cross_shard_rekeys == 1 and st.migrated_segments == 2
+
+    def test_pin_guards_remote_resident_and_unpin_drops_fetch(self):
+        st = _sharded(2)
+        remote = _doc_on(st, 1)
+        sid = st.put(Range(0, 8), _seg(8), doc_id=remote)
+        tok = st.pin([sid])
+        assert sid in st.remotes[0]._pins
+        st.get(sid)                                  # on-demand fetch
+        assert sid in st._fetched
+        st.unpin(tok)
+        assert sid not in st.remotes[0]._pins
+        assert sid not in st._fetched               # consumed on release
+
+
+# ---------------------------------------------------------------------------
+# coalescing
+# ---------------------------------------------------------------------------
+
+class TestCoalescing:
+    def test_one_doc_many_segments_one_transfer(self):
+        st = _sharded(2)
+        remote = _doc_on(st, 1)
+        for j in range(3):
+            st.put(Range(j * 8, (j + 1) * 8), _seg(8, float(j)),
+                   doc_id=remote)
+        n = st.prefetch(remote, upto=24)
+        assert n == 3 and st.remote_fetches == 3
+        assert st.transport.transfers == 1
+        assert st.transport.items_sent == 3
+        assert st.transport.coalesce_violations == 0
+
+    def test_many_docs_one_transfer_per_shard(self):
+        st = _sharded(4)
+        docs = [_doc_on(st, s, skip=k) for s in (1, 2, 3) for k in (0, 1)]
+        for d in docs:
+            st.put(Range(0, 8), _seg(8), doc_id=d)
+        st.prefetch_batch([(d, 8) for d in docs])
+        # six remote docs over three shards: exactly one transfer each
+        assert st.transport.transfers == 3
+        assert st.remote_fetches == 6
+        rep = st.transport.report()     # closes the open tick's accounting
+        assert rep["coalesce_violations"] == 0
+        assert rep["max_transfers_per_shard_tick"] == 1
+
+    def test_transport_counts_contract_violations(self):
+        tr = ShardTransport(2)
+        tr.begin_tick()
+        tr.transfer(1, 100)
+        tr.transfer(1, 100)       # second transfer to shard 1, same tick
+        tr.begin_tick()           # closes the dirty tick
+        assert tr.coalesce_violations == 1
+        assert tr.max_transfers_per_shard_tick == 2
+
+    def test_fetch_cache_cap_evicts_unpinned(self):
+        # a 1-byte cap forces eviction of every unpinned entry except the
+        # newest (the segment just fetched is never its own victim)
+        st = _sharded(2, fetch_cache_bytes=1)
+        remote = _doc_on(st, 1)
+        for j in range(4):
+            st.put(Range(j * 8, (j + 1) * 8), _seg(8), doc_id=remote)
+        st.prefetch(remote, upto=32)
+        assert st.remote_fetches == 4
+        assert len(st._fetched) == 1
+
+
+# ---------------------------------------------------------------------------
+# hedging and failure
+# ---------------------------------------------------------------------------
+
+class TestHedging:
+    def test_observed_straggler_triggers_hedge_rebuild_win(self):
+        st = _sharded(2, hedge_deadline_s=0.05)
+        remote = _doc_on(st, 1)
+        for j in range(2):
+            st.put(Range(j * 8, (j + 1) * 8), _seg(8), doc_id=remote)
+        # the first fetch goes out on the nominal estimate and *observes*
+        # the injected slowdown; from then on the estimate blows the
+        # deadline and the local rebuild wins the race
+        st.transport.slowdown[1] = 1e7
+        st.prefetch(remote, upto=16)
+        assert st.transport.transfers == 1 and st.hedged_fetches == 0
+        st._fetched.clear()
+        st._fetched_bytes = 0
+        st.prefetch(remote, upto=16)
+        assert st.hedged_fetches == 1
+        assert st.hedge_rebuild_wins == 1
+        assert st.cancelled_fetches == 2
+        assert st.transport.transfers == 1          # fetch was cancelled
+        assert list(st.index(remote).items()) == [] # planner rebuilds
+
+    def test_estimate_prefers_observed_rate(self):
+        tr = ShardTransport(2, bw_bytes_per_s=1e9, rtt_s=1e-3)
+        nominal = tr.estimate_fetch_s(1, 1_000_000)
+        assert nominal == pytest.approx(1e-3 + 1e-3)
+        tr.slowdown[1] = 100.0
+        tr.begin_tick()
+        tr.transfer(1, 1_000_000)
+        assert tr.estimate_fetch_s(1, 1_000_000) > 10 * nominal
+
+    def test_dead_shard_skips_fetch(self):
+        st = _sharded(2)
+        remote = _doc_on(st, 1)
+        st.put(Range(0, 8), _seg(8), doc_id=remote)
+        st.transport.fail(1)
+        st.transport.advance(31.0)      # past the 30s heartbeat timeout
+        assert list(st.index(remote).items()) == []
+        assert st.dead_shard_skips == 1
+        st.transport.heal(1)
+        st._views.clear()
+        assert len(list(st.index(remote).items())) == 1
+
+    def test_failed_shard_transfer_raises(self):
+        tr = ShardTransport(2)
+        tr.fail(1)
+        with pytest.raises(RuntimeError, match="down"):
+            tr.transfer(1, 100)
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+class TestPersistence:
+    def test_save_load_roundtrip_preserves_placement(self, tmp_path):
+        st = _sharded(2)
+        local, remote = _doc_on(st, 0), _doc_on(st, 1)
+        s0 = st.put(Range(0, 8), _seg(8, 1.0), doc_id=local)
+        s1 = st.put(Range(0, 8), _seg(8, 2.0), doc_id=remote)
+        st.save(tmp_path / "snap")
+        assert (tmp_path / "snap" / "shard-00").is_dir()
+        assert (tmp_path / "snap" / "shard-01").is_dir()
+
+        re = ShardedSegmentStore.load(tmp_path / "snap",
+                                      cost_model=serve_cost_model())
+        assert re.n_shards == 2 and re.total_segments() == 2
+        assert s0 in re._segs and s1 in re.remotes[0]._segs
+        np.testing.assert_array_equal(
+            np.asarray(re._segs[s0].caches["k"]),
+            np.asarray(_seg(8, 1.0)["k"]))
+
+    def test_load_rejects_shard_count_mismatch(self, tmp_path):
+        st = _sharded(2)
+        st.put(Range(0, 8), _seg(8), doc_id=_doc_on(st, 0))
+        st.save(tmp_path / "snap")
+        with pytest.raises(IOError, match="shards"):
+            ShardedSegmentStore.load(tmp_path / "snap", n_shards=4)
+
+
+# ---------------------------------------------------------------------------
+# reporting
+# ---------------------------------------------------------------------------
+
+class TestReporting:
+    def test_shard_report_finite_on_idle_store(self):
+        rep = _sharded(3).shard_report()
+        assert rep["shards"] == 3
+        for k, v in rep.items():
+            assert isinstance(v, (int, float)) and math.isfinite(v), (k, v)
+        for i in range(3):
+            assert rep[f"shard{i}_segments"] == 0
+
+    def test_shard_summaries_track_occupancy(self):
+        st = _sharded(2)
+        st.put(Range(0, 8), _seg(8), doc_id=_doc_on(st, 1))
+        by_shard = {s["shard"]: s for s in st.shard_summaries()}
+        assert by_shard[0]["segments"] == 0
+        assert by_shard[1]["segments"] == 1
+        assert by_shard[1]["device_bytes"] > 0
+
+    def test_session_report_idle_guard(self):
+        from repro.configs import ARCHS, reduced
+        from repro.models.lm import LM
+        from repro.serve.session import SessionManager
+
+        cfg = reduced(ARCHS["deepseek-67b"])
+        model = LM(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        # plain store: the shard keys exist, zeroed, finite
+        rep = SessionManager(model, params, chunk_tokens=32,
+                             decode_bucket=32).report()
+        for key in ("shards", "remote_fetches", "fetched_hits",
+                    "hedged_fetches", "coalesce_violations",
+                    "put_forwards", "fetched_segments", "sim_transfer_s"):
+            assert key in rep and math.isfinite(rep[key]), key
+        assert rep["shards"] == 1 and rep["remote_fetches"] == 0
+        # sharded store: per-shard occupancy keys join the report
+        mgr = SessionManager(model, params, chunk_tokens=32,
+                             decode_bucket=32, store=_sharded(2))
+        rep = mgr.report()
+        assert rep["shards"] == 2
+        assert rep["shard0_segments"] == 0 and rep["shard1_segments"] == 0
+        for v in rep.values():
+            assert math.isfinite(v), rep
