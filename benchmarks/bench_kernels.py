@@ -89,6 +89,38 @@ def main() -> None:
     emit("kernel_extend_pallas_2k", t_ker * 1e6,
          f"mode={mode};speedup_vs_blocked={t_blk/t_ker:.2f}x")
 
+    # decode-attention: one new token per row against a 2048-capacity cache
+    # with ragged pos (short rows mostly padding).  Dense is the legacy
+    # full-T path, blocked is the production CPU route, the Pallas kernel
+    # again runs interpreted off-TPU.
+    from repro.kernels.decode_attention import ops as dec_ops
+    from repro.kernels.decode_attention.ref import (
+        decode_attention_blocked, decode_attention_ref)
+
+    db, dkv, dg, dhd, dcap = 8, 4, 2, 64, 2048
+    r3 = np.random.default_rng(2)
+    dq = jnp.asarray(r3.standard_normal((db, 1, dkv * dg, dhd)), jnp.float32)
+    dk = jnp.asarray(r3.standard_normal((db, dcap, dkv, dhd)), jnp.float32)
+    dv = jnp.asarray(r3.standard_normal((db, dcap, dkv, dhd)), jnp.float32)
+    dpos = jnp.asarray([200] * 6 + [2000] * 2, jnp.int32)
+    dqg = dq[:, 0].reshape(db, dkv, dg, dhd)
+
+    f_dense = jax.jit(decode_attention_ref)
+    t_dense = _bench(lambda: jax.block_until_ready(f_dense(dqg, dk, dv, dpos)))
+    emit("kernel_decode_dense_xla_2k", t_dense * 1e6,
+         f"rows_per_s={db/t_dense:.2e}")
+
+    f_dblk = jax.jit(decode_attention_blocked)
+    t_dblk = _bench(lambda: jax.block_until_ready(f_dblk(dqg, dk, dv, dpos)))
+    emit("kernel_decode_blocked_xla_2k", t_dblk * 1e6,
+         f"rows_per_s={db/t_dblk:.2e};speedup_vs_dense={t_dense/t_dblk:.2f}x")
+
+    f_dker = jax.jit(lambda q, k, v, p: dec_ops.decode_attention(
+        q, k, v, pos=p, interpret=jax.default_backend() != "tpu"))
+    t_dker = _bench(lambda: jax.block_until_ready(f_dker(dq, dk, dv, dpos)))
+    emit("kernel_decode_pallas_2k", t_dker * 1e6,
+         f"mode={mode};speedup_vs_dense={t_dense/t_dker:.2f}x")
+
 
 if __name__ == "__main__":
     main()

@@ -54,6 +54,7 @@ MODULES = [
     "benchmarks.bench_serve_quant",    # int8 residency at halved budgets
     "benchmarks.bench_serve_edit",     # delta updates: edit-rebuild reuse
     "benchmarks.bench_serve_sharded",  # consistent-hash shards, hedged fetch
+    "benchmarks.bench_serve_decode",   # merged ragged packs vs split dense
 ]
 
 

@@ -12,25 +12,43 @@ def use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def kernel_mode(name: str, *, off: str, off_aliases: tuple[str, ...] = (),
+                fallback: str | None = None) -> str:
+    """Shared env routing for the Pallas kernels: 'kernel' | ``off`` | ``fallback``.
+
+    Reads ``REPRO_{name}_KERNEL``: ``1/on/true/kernel`` forces the Pallas
+    kernel (interpret mode off-TPU — the parity harness, ~100× slower than
+    XLA), ``0/off/false`` (or ``off``/any of ``off_aliases`` by name) forces
+    the non-kernel path, anything else is ``auto``: kernel on TPU, and off
+    elsewhere — except when ``fallback`` names an intermediate pure-JAX path
+    (e.g. decode's blocked softmax), which then wins on CPU and is also
+    selectable by name.
+
+    The mode is read at jit *trace* time: set the env var before building
+    an engine/builder.  Flipping it later in the same process does not
+    re-route executables already cached for a shape.
+    """
+    env = os.environ.get(f"REPRO_{name}_KERNEL", "auto").strip().lower()
+    if env in ("1", "on", "true", "kernel"):
+        return "kernel"
+    if env in ("0", "off", "false", off) or env in off_aliases:
+        return off
+    if fallback is not None and env == fallback:
+        return fallback
+    if jax.default_backend() == "tpu":
+        return "kernel"
+    return fallback if fallback is not None else off
+
+
 def extend_kernel_mode() -> str:
     """How ``prefill_extend`` runs its suffix attention: 'kernel' | 'jax'.
 
     'kernel' routes through ``kernels/extend_attention`` (Pallas; interpret
     mode off-TPU), 'jax' uses the pure-JAX blocked-softmax path.  Default is
     kernel on TPU and blocked elsewhere; ``REPRO_EXTEND_KERNEL=1/0``
-    overrides (1 on CPU runs the kernel in interpret mode — the parity
-    harness, ~100× slower than XLA).
-
-    The mode is read at jit *trace* time: set the env var before building
-    an engine/builder.  Flipping it later in the same process does not
-    re-route executables already cached for a shape.
+    overrides.  See ``kernel_mode`` for trace-time semantics.
     """
-    env = os.environ.get("REPRO_EXTEND_KERNEL", "auto").strip().lower()
-    if env in ("1", "on", "true", "kernel"):
-        return "kernel"
-    if env in ("0", "off", "false", "jax", "blocked"):
-        return "jax"
-    return "kernel" if jax.default_backend() == "tpu" else "jax"
+    return kernel_mode("EXTEND", off="jax", off_aliases=("blocked",))
 
 
 def quant_kernel_mode() -> str:
@@ -40,15 +58,24 @@ def quant_kernel_mode() -> str:
     (interpret mode off-TPU), 'ref' the pure-jnp blocked reference —
     which on CPU is the fast path (XLA fuses the cast+scale), so the
     default mirrors ``extend_kernel_mode``: kernel on TPU, reference
-    elsewhere.  ``REPRO_QUANT_KERNEL=1/0`` overrides (1 on CPU runs the
-    kernel in interpret mode — the parity harness).
+    elsewhere.  ``REPRO_QUANT_KERNEL=1/0`` overrides.
     """
-    env = os.environ.get("REPRO_QUANT_KERNEL", "auto").strip().lower()
-    if env in ("1", "on", "true", "kernel"):
-        return "kernel"
-    if env in ("0", "off", "false", "ref", "jax"):
-        return "ref"
-    return "kernel" if jax.default_backend() == "tpu" else "ref"
+    return kernel_mode("QUANT", off="ref", off_aliases=("jax",))
+
+
+def decode_kernel_mode() -> str:
+    """How one-token decode attention runs: 'kernel' | 'blocked' | 'dense'.
+
+    'kernel' routes through ``kernels/decode_attention``'s ragged
+    flash-decode Pallas kernel (per-row early exit over KV blocks;
+    interpret mode off-TPU), 'blocked' the pure-JAX online-softmax
+    fallback (O(B·block) score peak, pack-level early exit), 'dense' the
+    original full-T score materialization — bit-identical to the
+    pre-kernel decode path.  ``REPRO_DECODE_KERNEL=1/0`` overrides
+    (``blocked`` selects the fallback by name); default is kernel on TPU
+    and blocked elsewhere.  Read at jit trace time — see ``kernel_mode``.
+    """
+    return kernel_mode("DECODE", off="dense", fallback="blocked")
 
 
 def round_up(x: int, m: int) -> int:

@@ -1,0 +1,108 @@
+"""Ragged flash-decode attention — the per-token inner loop of serving.
+
+One decode step scores a single new query row against the session's whole
+KV cache.  Batched serving pads every cache in a pack to a shared bucketed
+capacity, so the dense path pays O(B·T_pad) score work and memory per
+token even when most rows are short.  This kernel makes that padding
+(nearly) free:
+
+  * one grid step = one (batch·KV head) stream; the G GQA query heads of
+    that KV head ride as the stream's q rows (padded up to a sublane
+    multiple), so the KV stream is read once per *group*;
+  * the KV stream is walked in ``chunk``-sized VMEM tiles with online
+    softmax (m, l, acc carries) — nothing O(T) is materialized;
+  * each row's valid length ``pos`` is a **runtime scalar vector** (SMEM
+    via scalar prefetch), and the chunk loop's trip count is
+    ``pos // chunk + 1`` — KV tiles entirely past a row's ``pos`` are
+    never loaded (**ragged early-exit**), so a 256-token session in a
+    2048-padded pack does ~1 tile of work, not 8.
+
+Numerical note: a tile that is *partially* past ``pos`` contributes exact
+zeros for its masked tail (``exp(NEG_INF − m)`` underflows to 0.0 with a
+finite running max, which block 0 always establishes since ``pos ≥ 0``),
+so per-row outputs are bit-invariant to the pack's padded capacity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import pad_axis, round_up
+
+NEG_INF = -1e30
+DECODE_CHUNK = 256        # KV tile length; fixed so tiling is prefix-stable
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, chunk: int):
+    rows, hd = q_ref.shape[1], q_ref.shape[2]
+    hd_v = v_ref.shape[2]
+    s = pl.program_id(0)
+    pos = pos_ref[s]                       # this stream's last valid KV index
+
+    q = q_ref[0].astype(jnp.float32) * (hd ** -0.5)      # (rows, hd) in VMEM
+
+    def body(i, carry):
+        m, l, acc = carry
+        kc = k_ref[0, pl.dslice(i * chunk, chunk), :].astype(jnp.float32)
+        vc = v_ref[0, pl.dslice(i * chunk, chunk), :].astype(jnp.float32)
+        sc = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (rows, chunk)
+        k_pos = i * chunk + jax.lax.broadcasted_iota(jnp.int32, (rows, chunk), 1)
+        sc = jnp.where(k_pos <= pos, sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jax.lax.dot_general(p, vc, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc * corr[:, None] + pv)
+
+    m0 = jnp.full((rows,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((rows,), jnp.float32)
+    a0 = jnp.zeros((rows, hd_v), jnp.float32)
+    # ragged early-exit: only tiles overlapping [0, pos] are ever visited
+    n_live = pos // chunk + 1
+    m, l, acc = jax.lax.fori_loop(0, n_live, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def decode_attention_streams(q, k, v, *, pos, chunk: int = DECODE_CHUNK,
+                             interpret: bool = False):
+    """Per-stream single-query decode attention.
+
+    q (S, rows, hd); k/v (S, T, hd[_v]); pos (S,) int32 — stream s attends
+    to kv positions ``≤ pos[s]``; anything beyond is padding and is either
+    masked (within a tile) or skipped outright (whole tiles past ``pos``).
+    ``pos`` rides in SMEM via scalar prefetch, so one compiled executable
+    serves every ragged pack of a bucket-padded shape.
+    """
+    s, rows, hd = q.shape
+    t = k.shape[1]
+    hd_v = v.shape[2]
+    chunk = min(chunk, round_up(t, 8))                   # auto-shrink for short KV
+    t_pad = round_up(t, chunk)
+    if t_pad != t:                                       # mask covers the pad
+        k = pad_axis(k, 1, t_pad)
+        v = pad_axis(v, 1, t_pad)
+    kern = functools.partial(_kernel, chunk=chunk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                           # pos rides in SMEM
+        grid=(s,),
+        in_specs=[
+            pl.BlockSpec((1, rows, hd), lambda i, p: (i, 0, 0)),
+            pl.BlockSpec((1, t_pad, hd), lambda i, p: (i, 0, 0)),
+            pl.BlockSpec((1, t_pad, hd_v), lambda i, p: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, hd_v), lambda i, p: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, rows, hd_v), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(s), q, k, v)

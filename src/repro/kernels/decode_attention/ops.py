@@ -1,0 +1,71 @@
+"""Public wrappers: one-token decode attention over a (B, T, KV, hd) cache.
+
+This is the entry point ``models/attention.py::decode_attention`` routes
+through on TPU.  Everything layout-related happens here so the kernel
+stays a pure per-stream primitive:
+
+  * (batch, KV-head) pairs are flattened onto the kernel's stream grid;
+  * GQA stacks each KV head's G query heads along one stream's q-row axis
+    (padded with zero rows up to a sublane multiple of 8), so the cache is
+    streamed once per *group* and no head expansion is materialized;
+  * per-row ``pos`` — the row's last valid cache index — is repeated per
+    KV head and passed through as runtime scalars, so one compile serves
+    every ragged pack of a bucketed capacity;
+  * :func:`write_kv` is the decode step's in-place K/V insert at ``pos``,
+    shared verbatim by every routing mode (it IS the legacy write, moved
+    here so 'dense' stays bit-identical to the pre-kernel path).
+
+Off-TPU the kernel runs in Pallas ``interpret`` mode (bit-accurate
+correctness harness); see :func:`repro.kernels.common.use_interpret`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import round_up, use_interpret
+
+from .kernel import DECODE_CHUNK, decode_attention_streams
+
+
+def write_kv(cache_k, cache_v, k_new, v_new, pos):
+    """Insert the decode step's new K/V row at each sequence's ``pos``.
+
+    cache_k/v (B, T, KV, hd[_v]); k_new/v_new (B, 1, KV, hd[_v]); pos (B,).
+    """
+    write = jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))
+    return write(cache_k, k_new, pos), write(cache_v, v_new, pos)
+
+
+def decode_attention(q, k, v, *, pos, chunk: int = DECODE_CHUNK,
+                     interpret=None):
+    """Single-query grouped attention over a padded cache (see ref.py).
+
+    q (B, 1, H, hd); k/v (B, T, KV, hd[_v]) with KV dividing H; pos (B,)
+    int32 — row b attends to cache positions ``≤ pos[b]``.  Returns
+    (B, 1, H, hd_v) in q's dtype.
+    """
+    q = jnp.asarray(q)
+    k = jnp.asarray(k)
+    v = jnp.asarray(v)
+    b, _, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv                              # GQA group size (1 = MHA)
+    hd_v = v.shape[3]
+    rows = round_up(g, 8)                    # sublane-align the tiny q tile
+    # one stream per (batch, KV head); q head h' = k·g + g' shares KV head
+    # k, so the G group heads stack (zero-padded to `rows`) on the q axis
+    qs = q[:, 0].reshape(b, kv, g, hd)
+    if rows != g:
+        qs = jnp.pad(qs, ((0, 0), (0, 0), (0, rows - g), (0, 0)))
+    qs = qs.reshape(b * kv, rows, hd)
+    ks = k.transpose(0, 2, 1, 3).reshape(b * kv, t, hd)
+    vs = v.transpose(0, 2, 1, 3).reshape(b * kv, t, hd_v)
+    if interpret is None:
+        interpret = use_interpret()
+    ps = jnp.repeat(jnp.asarray(pos, jnp.int32), kv)
+    out = decode_attention_streams(qs, ks, vs, pos=ps, chunk=chunk,
+                                   interpret=interpret)
+    out = out.reshape(b, kv, rows, hd_v)[:, :, :g]
+    return out.reshape(b, 1, h, hd_v)

@@ -1,0 +1,153 @@
+"""Pure-jnp references for the ragged flash-decode kernel.
+
+Semantics: one new query row per sequence, scored against cache positions
+``≤ pos[b]`` of a capacity-padded KV cache; anything beyond ``pos`` is
+padding and ignored.
+
+:func:`decode_attention_blocked` is also the production CPU path: an
+online-softmax scan over **fixed-size** KV blocks with a pack-level early
+exit (the loop stops after the last block any row still occupies), so the
+peak score tensor is O(B·block) instead of the dense path's O(B·T).  The
+block size is deliberately *not* a function of the padded capacity —
+prefix-stable tiling plus exact-zero masked contributions make a row's
+output bit-invariant to how much padding its pack carries, which is what
+lets the scheduler merge mixed-capacity sessions into one pack without
+perturbing streams.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_axis, round_up
+
+NEG_INF = -1e30
+DECODE_BLOCK = 256        # fixed KV block; independent of padded capacity
+
+
+def decode_attention_blocked(q, k, v, pos, *, block: int = DECODE_BLOCK,
+                             row_caps=None, layer=None):
+    """Grouped single-query attention, online softmax over KV blocks.
+
+    q (B, KV, G, hd); k/v (B, T, KV, hd[_v]); pos (B,) int32 →
+    (B, KV, G, hd_v) float32.  The block loop's trip count is
+    ``max(pos) // block + 1`` — blocks past every row's ``pos`` are never
+    touched (pack-level early exit; the Pallas kernel sharpens this to
+    per-row).
+
+    ``row_caps`` switches to the **capacity-tiered** static path serving
+    uses for merged mixed-capacity packs: a tuple of per-row KV capacities
+    in non-increasing order (the scheduler sorts pack rows to match).
+    Capacities are static pack metadata, so the block loop unrolls at
+    trace time and each block slices only the rows whose capacity reaches
+    it — a 256-capacity row in a 2048-padded pack does one block of work,
+    not eight, XLA-side (the per-row raggedness the Pallas kernel gets
+    from its runtime ``pos`` early-exit).  With it, ``layer`` selects one
+    layer of a layer-stacked (L, B, T, KV, hd) cache by (traced) index so
+    the in-place serving decode never materializes a per-layer slice.
+    Block starts stay multiples of ``block`` and masked tails contribute
+    exact zeros, so per-row outputs are bitwise identical to the dynamic
+    path and invariant to the pack's padded capacity.
+    """
+    if row_caps is not None:
+        return _blocked_tiered(q, k, v, pos, block=block,
+                               row_caps=row_caps, layer=layer)
+    assert layer is None, "layer selection requires the row_caps path"
+    b, kv, g, hd = q.shape
+    t = k.shape[1]
+    hd_v = v.shape[3]
+    t_pad = round_up(t, block)
+    if t_pad != t:                                       # mask covers the pad
+        k = pad_axis(k, 1, t_pad)
+        v = pad_axis(v, 1, t_pad)
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def body(i, carry):
+        m, l, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, i * block, block, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, i * block, block, axis=1)
+        sc = jnp.einsum("bkgd,btkd->bkgt", qf, kc.astype(jnp.float32))
+        k_pos = i * block + jnp.arange(block)
+        valid = k_pos[None, :] <= pos[:, None]           # (B, block)
+        sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bkgt,btkd->bkgd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc * corr[..., None] + pv)
+
+    m0 = jnp.full((b, kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, hd_v), jnp.float32)
+    n_live = jnp.max(pos) // block + 1
+    m, l, acc = jax.lax.fori_loop(0, n_live, body, (m0, l0, a0))
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def _blocked_tiered(q, k, v, pos, *, block, row_caps, layer):
+    """Static capacity-tiered online softmax (see decode_attention_blocked).
+
+    k/v are (B, T, KV, hd[_v]), or (L, B, T, KV, hd[_v]) when ``layer``
+    (a traced int32 scalar) is given.  Rows must be ordered by
+    non-increasing ``row_caps``.
+    """
+    b, kv, g, hd = q.shape
+    stacked = layer is not None
+    t = k.shape[2] if stacked else k.shape[1]
+    hd_v = v.shape[-1]
+    caps = tuple(min(int(c), t) for c in row_caps)
+    if len(caps) != b or any(caps[i] < caps[i + 1] for i in range(b - 1)):
+        raise ValueError(f"row_caps must list all {b} rows in "
+                         f"non-increasing order, got {row_caps}")
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    pos = jnp.asarray(pos, jnp.int32)
+    m = jnp.full((b, kv, g), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, kv, g), jnp.float32)
+    acc = jnp.zeros((b, kv, g, hd_v), jnp.float32)
+    for start in range(0, caps[0], block):
+        blen = min(block, t - start)
+        live = sum(1 for c in caps if c > start)
+        if stacked:
+            kc = jax.lax.dynamic_slice(
+                k, (layer, 0, start, 0, 0), (1, live, blen, kv, hd))[0]
+            vc = jax.lax.dynamic_slice(
+                v, (layer, 0, start, 0, 0), (1, live, blen, kv, hd_v))[0]
+        else:
+            kc = k[:live, start:start + blen]
+            vc = v[:live, start:start + blen]
+        sc = jnp.einsum("bkgd,btkd->bkgt", qf[:live], kc.astype(jnp.float32))
+        k_pos = start + jnp.arange(blen)
+        valid = k_pos[None, :] <= pos[:live, None]
+        sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+        m_new = jnp.maximum(m[:live], sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m[:live] - m_new)
+        l_new = l[:live] * corr + p.sum(-1)
+        pv = jnp.einsum("bkgt,btkd->bkgd", p, vc.astype(jnp.float32))
+        acc_new = acc[:live] * corr[..., None] + pv
+        if live == b:
+            m, l, acc = m_new, l_new, acc_new
+        else:
+            m = jnp.concatenate([m_new, m[live:]])
+            l = jnp.concatenate([l_new, l[live:]])
+            acc = jnp.concatenate([acc_new, acc[live:]])
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def decode_attention_ref(q, k, v, pos):
+    """Dense oracle: full-T scores, fp32 math, same shapes as blocked.
+
+    Mirrors the legacy (``REPRO_DECODE_KERNEL=0``) score math in
+    ``models/attention.py`` — einsum then scale, masked softmax over the
+    whole padded capacity.
+    """
+    b, kv, g, hd = q.shape
+    t = k.shape[1]
+    sc = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * (hd ** -0.5)
+    valid = jnp.arange(t)[None, :] <= jnp.asarray(pos)[:, None]
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    prob = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bkgt,btkd->bkgd", prob, v.astype(jnp.float32))

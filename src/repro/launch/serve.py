@@ -350,6 +350,12 @@ def run_multi(args, cfg, model, params, rng) -> None:
     print(f"  decode materialization: {mgr.sched.decode_segments} segments "
           f"admitted, {mgr.sched.decode_rejects} rejected")
     rep = mgr.report()   # guarded: finite even on an idle/zero-traffic run
+    packing = "merged ragged" if mgr.merge_decode_packs else "capacity-split"
+    print(f"  decode packs ({packing}, {mgr.decode_mode} attention): "
+          f"padded occupancy {rep['decode_padded_frac']:.1%} "
+          f"({rep['decode_valid_tokens']} valid / "
+          f"{rep['decode_padded_tokens']} padded KV tokens), "
+          f"attn ~{rep['decode_attn_flops']/1e9:.3f} GFLOP")
     mode = "async" if mgr.async_prefill else "sync"
     print(f"  pipeline ({mode} prefill): {rep['tickets_launched']} builds "
           f"launched, {rep['tickets_joined']} joined "

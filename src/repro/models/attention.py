@@ -198,25 +198,75 @@ def decode_attention(p: AttnParams, x, cache_k, cache_v, pos, *, theta: float,
     """One-step decode.  x (B,1,d); cache (B,T,KV,hd); pos (B,) int32.
 
     Writes the new K/V at ``pos`` and attends over positions ≤ pos.
+    Routed by ``kernels.common.decode_kernel_mode`` (trace-time): 'kernel'
+    is the ragged flash-decode Pallas kernel (per-row early exit over KV
+    tiles), 'blocked' the pure-JAX online-softmax fallback (O(B·block)
+    score peak, pack-level early exit), 'dense' (``REPRO_DECODE_KERNEL=0``)
+    the original full-T score materialization, bit-identical to the
+    pre-kernel path.  Kernel/blocked outputs are bit-invariant to the
+    cache's padded capacity (masked tail contributions are exact zeros),
+    so mixed-capacity sessions can share one pack without perturbing
+    streams; they differ from 'dense' only by fp32 reduction order
+    (~1e-6 relative on the attention output).
     """
+    from repro.kernels.common import decode_kernel_mode
+    from repro.kernels.decode_attention import ops as decode_ops
+
     b = x.shape[0]
     t, kv = cache_k.shape[1], cache_k.shape[2]
     q, k_new, v_new = _project_qkv(
         p, x, x, pos[:, None], pos[:, None], theta
     )                                                     # q (B,1,H,hd)
-    cache_k = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))(
-        cache_k, k_new, pos
-    )
-    cache_v = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))(
-        cache_v, v_new, pos
-    )
+    cache_k, cache_v = decode_ops.write_kv(cache_k, cache_v, k_new, v_new, pos)
     h = q.shape[2]
-    qg = _grouped(q, kv)[:, 0].astype(jnp.float32)        # (B,KV,G,hd)
-    sc = jnp.einsum("bkgd,btkd->bkgt", qg, cache_k.astype(jnp.float32))
-    sc = sc * (q.shape[-1] ** -0.5)
-    valid = jnp.arange(t)[None] <= pos[:, None]           # (B,T)
-    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
-    prob = jax.nn.softmax(sc, axis=-1)
-    out = jnp.einsum("bkgt,btkd->bkgd", prob, cache_v.astype(jnp.float32))
-    out = out.reshape(b, 1, h, q.shape[-1]).astype(x.dtype)
+    mode = decode_kernel_mode()
+    if mode == "kernel":
+        out = decode_ops.decode_attention(q, cache_k, cache_v, pos=pos)
+        out = out.astype(x.dtype)
+    elif mode == "blocked":
+        from repro.kernels.decode_attention.ref import decode_attention_blocked
+
+        qg = _grouped(q, kv)[:, 0]                        # (B,KV,G,hd)
+        out = decode_attention_blocked(qg, cache_k, cache_v, pos)
+        out = out.reshape(b, 1, h, out.shape[-1]).astype(x.dtype)
+    else:
+        qg = _grouped(q, kv)[:, 0].astype(jnp.float32)    # (B,KV,G,hd)
+        sc = jnp.einsum("bkgd,btkd->bkgt", qg, cache_k.astype(jnp.float32))
+        sc = sc * (q.shape[-1] ** -0.5)
+        valid = jnp.arange(t)[None] <= pos[:, None]       # (B,T)
+        sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+        prob = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bkgt,btkd->bkgd", prob, cache_v.astype(jnp.float32))
+        out = out.reshape(b, 1, h, q.shape[-1]).astype(x.dtype)
     return proj_out(out, p.wo), (cache_k, cache_v)
+
+
+def decode_attention_packed(p: AttnParams, x, k_all, v_all, layer, pos, *,
+                            theta: float, row_caps):
+    """One-step decode over a **layer-stacked** KV cache, updated in place.
+
+    The serving fast path (``LM._decode_step_ragged``): x (B,1,d);
+    k_all/v_all (L,B,T,KV,hd[_v]) — the whole segment's stacked cache —
+    ``layer`` a traced int32 layer index, ``pos`` (B,) int32, ``row_caps``
+    the pack's static per-row KV capacities (non-increasing).  The new
+    K/V row is scattered into the stack at (layer, row, pos) — with the
+    caller's buffer donation that is an in-place write of B rows, not the
+    O(B·T) per-layer cache rewrite of the scanned path — and attention
+    runs the capacity-tiered blocked softmax, slicing each KV block
+    straight out of the stack (rows whose capacity ends before a block
+    never load it).  Returns (out, k_all, v_all).
+    """
+    b = x.shape[0]
+    kv = k_all.shape[3]
+    q, k_new, v_new = _project_qkv(p, x, x, pos[:, None], pos[:, None], theta)
+    rows = jnp.arange(b)
+    k_all = k_all.at[layer, rows, pos].set(k_new[:, 0])
+    v_all = v_all.at[layer, rows, pos].set(v_new[:, 0])
+    h = q.shape[2]
+    from repro.kernels.decode_attention.ref import decode_attention_blocked
+
+    qg = _grouped(q, kv)[:, 0]                            # (B,KV,G,hd)
+    out = decode_attention_blocked(qg, k_all, v_all, pos,
+                                   row_caps=row_caps, layer=layer)
+    out = out.reshape(b, 1, h, out.shape[-1]).astype(x.dtype)
+    return proj_out(out, p.wo), k_all, v_all

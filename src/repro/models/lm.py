@@ -557,9 +557,30 @@ class LM:
             x = x + y.astype(x.dtype)
         return x, out_cache
 
-    def decode_step(self, params, caches, tokens, pos):
-        """One token for every sequence.  tokens (B,1); pos (B,) int32."""
+    def decode_step(self, params, caches, tokens, pos, row_caps=None):
+        """One token for every sequence.  tokens (B,1); pos (B,) int32.
+
+        Attention layers route through ``attn.decode_attention``, which
+        picks a decode path at trace time (``REPRO_DECODE_KERNEL``): the
+        ragged flash-decode Pallas kernel, the blocked-softmax fallback,
+        or the legacy dense full-T scores.  Kernel/blocked outputs are
+        per-row bit-invariant to the cache's padded capacity, so the
+        scheduler may pack mixed-capacity sessions into one decode call.
+        MLA and SSD mixers keep their dedicated dense decode paths.
+
+        ``row_caps`` — the pack's static per-row KV capacities in
+        non-increasing order — is the scheduler's opt-in to the ragged
+        fast path (blocked mode, attention-only stacks): caches update
+        in place via per-row scatters instead of the scanned path's full
+        O(B·T) cache rewrite per token, and each row's attention stops at
+        its own capacity.  Same values either way (scatter vs
+        dynamic-update write the same rows; skipped blocks are exact-zero
+        no-ops) — it is purely an execution-cost change.
+        """
         cfg = self.cfg
+        if row_caps is not None and self._ragged_decode_ok():
+            return self._decode_step_ragged(params, caches, tokens, pos,
+                                            row_caps)
         x = params["embed"].astype(self.compute_dtype)[tokens]
         new_caches: list = []
         for (period, n), seg_params, seg_cache in zip(
@@ -575,6 +596,71 @@ class LM:
 
             x, seg_cache_new = jax.lax.scan(body, x, (seg_params, seg_cache))
             new_caches.append(seg_cache_new)
+        hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self.logits(params, hidden)[:, 0]
+        return logits, new_caches
+
+    def _ragged_decode_ok(self) -> bool:
+        """Ragged in-place decode serves plain-attention stacks only (the
+        blocked tiered path needs k/v leaves; MLA/SSD/cross keep their
+        scanned decode)."""
+        from repro.kernels.common import decode_kernel_mode
+
+        if decode_kernel_mode() != "blocked":
+            return False
+        return all(spec.mixer == "attn" and not spec.cross
+                   for period, _ in self.segments for spec in period)
+
+    def _decode_step_ragged(self, params, caches, tokens, pos, row_caps):
+        """Serving decode over capacity-sorted packs: scan layers with the
+        stacked K/V cache in the carry, scatter-writing one token row per
+        layer (in place under donation) and reading only the KV blocks
+        each row's static capacity reaches.  Value-identical to the
+        scanned path; the cost drops from O(B·T_pad) cache traffic per
+        token to O(B) writes + O(Σ live KV) reads."""
+        cfg = self.cfg
+        x = params["embed"].astype(self.compute_dtype)[tokens]
+        new_caches: list = []
+        for (period, n), seg_params, seg_cache in zip(
+            self.segments, params["segments"], caches
+        ):
+            leaves = tuple((seg_cache[f"p{j}"]["k"], seg_cache[f"p{j}"]["v"])
+                           for j in range(len(period)))
+
+            def body(carry, xs):
+                x, leaves = carry
+                p, i = xs
+                out = []
+                for j, spec in enumerate(period):
+                    k_all, v_all = leaves[j]
+                    pj = p[f"p{j}"]
+                    h = rms_norm(x.astype(self.compute_dtype), pj["ln1"],
+                                 cfg.norm_eps)
+                    mixed, k_all, v_all = attn.decode_attention_packed(
+                        _as_attn_params(pj["mixer"]), h, k_all, v_all, i,
+                        pos, theta=cfg.rope_theta, row_caps=row_caps)
+                    x = x + mixed.astype(x.dtype)
+                    if spec.mlp != "none":
+                        hn = rms_norm(x.astype(self.compute_dtype),
+                                      pj["ln2"], cfg.norm_eps)
+                        if spec.mlp == "moe":
+                            y, _ = moe_mod.moe_ffn(
+                                _as_moe_params(pj["mlp"]), cfg.moe, hn,
+                                activation=cfg.activation,
+                                groups=cfg.moe_groups)
+                        else:
+                            y = moe_mod.dense_ffn(pj["mlp"], hn,
+                                                  cfg.activation)
+                        x = x + y.astype(x.dtype)
+                    out.append((k_all, v_all))
+                return (x, tuple(out)), None
+
+            (x, leaves), _ = jax.lax.scan(
+                body, (x, leaves), (seg_params, jnp.arange(n)))
+            new_caches.append({
+                f"p{j}": {**seg_cache[f"p{j}"],
+                          "k": leaves[j][0], "v": leaves[j][1]}
+                for j in range(len(period))})
         hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self.logits(params, hidden)[:, 0]
         return logits, new_caches

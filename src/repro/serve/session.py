@@ -57,7 +57,7 @@ import numpy as np
 from repro.core.cost import CostModel, serve_cost_model
 from repro.core.descriptors import Range
 from repro.core.optimizer import Plan
-from repro.kernels.common import bucket_len
+from repro.kernels.common import bucket_len, decode_kernel_mode
 
 from .engine import PendingBuild, PrefixCacheBuilder, ServeStats
 from .kv_cache import (SEQ_KEYS, SegmentStore, _leaf_key, cache_len,
@@ -212,12 +212,22 @@ class SchedulerStats:
     edit_reused_segments: int = 0  # segments rekeyed to the edited content
     edit_orphaned: int = 0      # segments invalidated (released) by edits
     edit_cancelled: int = 0     # in-flight requests superseded by an edit
+    # ragged-decode observability
+    decode_valid_tokens: int = 0   # Σ per-row live KV (pos+1) over decode calls
+    decode_padded_tokens: int = 0  # Σ rows × padded pack capacity
+    decode_attn_flops: float = 0.0  # estimated attention FLOPs actually executed
 
     # all derived means guard the zero-traffic case: an idle server's
     # report prints 0.0, never NaN
     @property
     def mean_batch(self) -> float:
         return self.decode_rows / self.decode_calls if self.decode_calls else 0.0
+
+    @property
+    def decode_padded_frac(self) -> float:
+        """Valid tokens ÷ padded pack capacity (1.0 = zero padding waste)."""
+        return (self.decode_valid_tokens / self.decode_padded_tokens
+                if self.decode_padded_tokens else 0.0)
 
     @property
     def overlap_batch(self) -> float:
@@ -242,6 +252,7 @@ class SessionManager:
                  eviction_policy: Optional[str] = None,
                  decode_materialize: Optional[bool] = None,
                  async_prefill: Optional[bool] = None,
+                 merge_decode_packs: Optional[bool] = None,
                  store: Optional[SegmentStore] = None) -> None:
         self.model = model
         self.params = params
@@ -295,6 +306,22 @@ class SessionManager:
         self.async_prefill = async_prefill
         self.decode_bucket = decode_bucket
         self.max_batch = max_batch
+        # merged ragged packs: with a decode path whose per-row output is
+        # bit-invariant to padded capacity (kernel/blocked — masked tail
+        # contributions are exact zeros), mixed-capacity sessions can share
+        # one pack padded to the max bucket: bigger batches per decode
+        # call, and the ragged early-exit makes the padding ~free.  The
+        # legacy dense path reads the full capacity per row, so there the
+        # pre-kernel capacity-split grouping remains the default
+        # (REPRO_DECODE_KERNEL=0 ⇒ behavior bit-identical to pre-kernel).
+        self.decode_mode = decode_kernel_mode()
+        if merge_decode_packs is None:
+            merge_decode_packs = self.decode_mode != "dense"
+        self.merge_decode_packs = merge_decode_packs
+        # attention-bearing layers, for the decode-FLOP estimate
+        self._n_attn_layers = sum(
+            n * sum(1 for spec in period if spec.mixer in ("attn", "mla"))
+            for period, n in model.segments)
         # per-request counters live on each Session (folded into
         # _closed_stats on close); the manager-level object only carries the
         # shared batched-decode wall time.  aggregate_stats() is the
@@ -304,16 +331,20 @@ class SessionManager:
         self._closed_stats = ServeStats()
         self.sessions: dict[int, Session] = {}
         self._next_sid = 0
-        # where the backend supports donation, the decode jit donates its
-        # cache operand — in-place KV updates instead of a full cache copy
-        # per step; pack building then forces owned buffers (see
-        # batch_caches).  The CPU backend doesn't implement donation (it
-        # would only warn), so both the donation and the defensive copy
-        # are skipped there.
-        self._donate_decode = jax.default_backend() != "cpu"
+        # the decode jit donates its cache operand — in-place KV updates
+        # instead of a full cache copy per step — so pack building forces
+        # owned buffers (see batch_caches): a donated pack must never
+        # alias a session's retained cache rows.  Donation holds on CPU
+        # too, and the ragged ``row_caps`` fast path leans on it: its
+        # per-row scatter writes only stay O(B) per step when XLA can
+        # update the carried cache buffers in place.  ``row_caps`` is
+        # static pack metadata (per-row KV capacities), so it sits in the
+        # compile key, not in the traced operands.
+        self._donate_decode = True
         self._jit_decode = jax.jit(
             model.decode_step,
-            donate_argnums=(1,) if self._donate_decode else ())
+            donate_argnums=(1,),
+            static_argnames=("row_caps",))
         # live decode packs: tuple(sids) -> batched caches (padded to a bucket)
         self._packs: dict[tuple[int, ...], Any] = {}
         # un-finalized async builds, FIFO in submit order
@@ -689,21 +720,42 @@ class SessionManager:
     def _plan_groups(self, decode_set: list) -> list[tuple[int, ...]]:
         """Partition ready sessions into batchable groups of ≤ max_batch.
 
-        Sessions batch together only when they share a cache tree signature
-        *and* a bucketed KV capacity.  Capacity is part of the key because
-        a pack rides at its members' maximum: coalescing a 2048-token
-        session with 256-token ones would pad every short row to 2048 and
-        multiply the whole pack's attention cost — decode throughput for
-        warm sessions must hold steady when a long cold session joins
-        mid-stream, not degrade to the newcomer's sequence length.
-        Grouping never affects tokens (batched decode is bit-identical to
-        single-session decode regardless of pack membership).
+        Sessions batch together when they share a cache tree signature.
+        Under the ragged decode paths (``merge_decode_packs``, the default
+        for kernel/blocked modes) that is the *whole* key: mixed-capacity
+        sessions merge into one pack padded to the group's max bucket —
+        KV tiles past a row's ``pos`` are skipped (kernel) or exact-zero
+        no-ops (blocked), so the padding costs ~nothing and effective
+        batch size rises on mixed short/long traffic.
+
+        Under the legacy dense path every row pays the pack's full padded
+        capacity, so there the bucketed KV capacity stays part of the key:
+        coalescing a 2048-token session with 256-token ones would pad
+        every short row to 2048 and multiply the whole pack's attention
+        cost — warm decode throughput must hold steady when a long cold
+        session joins mid-stream, not degrade to the newcomer's length.
+        Grouping never affects tokens either way (batched decode is
+        bit-identical to single-session decode regardless of pack
+        membership or padded capacity — see ``attn.decode_attention``).
         """
         by_sig: dict[tuple, list] = {}
-        for s in sorted(decode_set, key=lambda s: s.sid):
-            cap = bucket_len(max(s.capacity, cache_len(s.caches)),
-                             self.decode_bucket)
-            by_sig.setdefault((batch_signature(s.caches), cap), []).append(s)
+        if self.merge_decode_packs:
+            # merged packs order rows by bucketed capacity, largest first,
+            # so the tiered blocked path can slice each KV block down to
+            # just the rows whose capacity reaches it; sid breaks ties so
+            # an unchanged membership keeps a deterministic (pack-stable)
+            # tuple.  Row order never affects tokens — each row's decode
+            # is independent of its pack position.
+            order = lambda s: (-self._row_cap(s), s.sid)
+        else:
+            order = lambda s: s.sid
+        for s in sorted(decode_set, key=order):
+            sig = batch_signature(s.caches)
+            if self.merge_decode_packs:
+                key: tuple = (sig,)
+            else:
+                key = (sig, self._row_cap(s))
+            by_sig.setdefault(key, []).append(s)
         groups: list[tuple[int, ...]] = []
         for members in by_sig.values():
             for i in range(0, len(members), self.max_batch):
@@ -718,6 +770,11 @@ class SessionManager:
             if g not in self._packs:
                 self._build_pack(g)
         return groups
+
+    def _row_cap(self, s: Session) -> int:
+        """A session's bucketed KV capacity — its tier in a merged pack."""
+        return bucket_len(max(s.capacity, cache_len(s.caches)),
+                          self.decode_bucket)
 
     def _build_pack(self, group: tuple[int, ...]) -> None:
         sess = [self.sessions[sid] for sid in group]
@@ -743,16 +800,73 @@ class SessionManager:
         caches = self._packs[group]
         toks = jnp.asarray([[s.next_tok] for s in sess], jnp.int32)
         pos = jnp.asarray([s.pos for s in sess], jnp.int32)
-        logits, caches = self._jit_decode(self.params, caches, toks, pos)
+        pack_cap = cache_len(caches)
+        row_caps = None
+        if self.decode_mode == "blocked":
+            # static per-row KV capacities, non-increasing by construction
+            # (_plan_groups sorts merged packs largest-first; split packs
+            # are uniform): opts decode_step into the tiered blocked
+            # attention + in-place ragged cache update where the model
+            # supports it
+            row_caps = tuple(min(self._row_cap(s), pack_cap) for s in sess)
+        logits, caches = self._jit_decode(self.params, caches, toks, pos,
+                                          row_caps=row_caps)
         self._packs[group] = caches
-        # one host sync for the whole batch; greedy sessions sample from this
-        greedy_toks = np.asarray(jnp.argmax(logits, axis=-1))
+        # one host transfer for the whole batch, then zero-dispatch numpy
+        # row views — per-row jnp slicing/argmax costs an eager dispatch
+        # each (~0.2 ms on CPU), which at one token per step dwarfs the
+        # decode math itself.  numpy argmax breaks ties first-index like
+        # jnp, so greedy streams are unchanged.
+        logits_np = np.asarray(logits)
+        greedy_toks = logits_np.argmax(-1)
         for i, s in enumerate(sess):
-            s.logits = logits[i:i + 1]
+            s.logits = logits_np[i:i + 1]
             s.greedy_next = int(greedy_toks[i])
             s.pos += 1
         self.sched.decode_calls += 1
         self.sched.decode_rows += len(group)
+        # ragged-decode accounting: live KV per row (post-increment pos is
+        # exactly the tokens attended this step) vs the padded capacity
+        # every row rides at, plus an attention-FLOP estimate honoring
+        # what the routed decode path actually computed
+        cap = pack_cap
+        live = [s.pos for s in sess]
+        self.sched.decode_valid_tokens += sum(live)
+        self.sched.decode_padded_tokens += cap * len(sess)
+        self.sched.decode_attn_flops += self._decode_attn_flops(
+            live, cap, row_caps)
+
+    def _decode_attn_flops(self, live: list[int], cap: int,
+                           row_caps=None) -> float:
+        """Attention MACs×2 one decode call executed (host-side estimate).
+
+        Per attended KV token a query row does 2 matmuls (q·k and p·v) of
+        ``hd`` MACs across ``H`` heads → 4·H·hd FLOPs.  How many KV tokens
+        a row touches depends on the routed path: 'dense' reads the full
+        padded capacity, 'blocked' stops after the pack's last live
+        256-block, 'kernel' stops per row (ragged early-exit).
+        """
+        from repro.kernels.decode_attention.kernel import DECODE_CHUNK
+        from repro.kernels.decode_attention.ref import DECODE_BLOCK
+
+        cfg = self.model.cfg
+        per_tok = 4.0 * cfg.n_heads * cfg.head_dim * self._n_attn_layers
+        if self.decode_mode == "dense":
+            tokens = cap * len(live)
+        elif self.decode_mode == "blocked":
+            if row_caps is not None:
+                # tiered: each row reads 256-blocks up to its own capacity
+                tokens = sum(min(bucket_len(c, DECODE_BLOCK), cap)
+                             for c in row_caps)
+            else:
+                blk = ((max(live) + DECODE_BLOCK - 1)
+                       // DECODE_BLOCK * DECODE_BLOCK)
+                tokens = min(blk, bucket_len(cap, DECODE_BLOCK)) * len(live)
+        else:
+            chunk = min(DECODE_CHUNK, cap)
+            tokens = sum(min((t + chunk - 1) // chunk * chunk, cap)
+                         for t in live)
+        return per_tok * tokens
 
     # -- reporting ---------------------------------------------------------
     def aggregate_stats(self) -> ServeStats:
@@ -787,6 +901,13 @@ class SessionManager:
             "decode_calls": sc.decode_calls,
             "mean_batch": sc.mean_batch,
             "pack_rebuilds": sc.pack_rebuilds,
+            # ragged-decode padding waste: valid ÷ padded tokens per round
+            # (guarded property — 0.0 on an idle server), raw counters,
+            # and the mode-aware attention-FLOP estimate
+            "decode_padded_frac": sc.decode_padded_frac,
+            "decode_valid_tokens": sc.decode_valid_tokens,
+            "decode_padded_tokens": sc.decode_padded_tokens,
+            "decode_attn_flops": sc.decode_attn_flops,
             "decode_segments": sc.decode_segments,
             "decode_rejects": sc.decode_rejects,
             "tickets_launched": sc.tickets_launched,

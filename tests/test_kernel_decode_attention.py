@@ -1,0 +1,210 @@
+"""Ragged flash-decode kernel: kernel-vs-blocked-vs-dense parity across GQA
+group sizes, ragged per-row ``pos`` (incl. the pos=0 and pos=T−1
+boundaries), batch 1 vs packed, capacity bit-invariance, and the routed
+model path (``REPRO_DECODE_KERNEL=0`` bit-identical to the legacy dense
+decode).
+
+Everything here runs the Pallas kernel in ``interpret=True`` on CPU — the
+same code path the TPU executes, minus Mosaic lowering — and is fast-lane
+safe (no @slow marks).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import ops
+from repro.kernels.decode_attention.kernel import decode_attention_streams
+from repro.kernels.decode_attention.ref import (
+    decode_attention_blocked, decode_attention_ref)
+
+
+def _rand(shape, dtype, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(dtype)
+
+
+def _case(b, t, kv, g, hd, seed=0):
+    h = kv * g
+    q = jnp.asarray(_rand((b, 1, h, hd), np.float32, seed))
+    k = jnp.asarray(_rand((b, t, kv, hd), np.float32, seed + 1))
+    v = jnp.asarray(_rand((b, t, kv, hd), np.float32, seed + 2))
+    return q, k, v
+
+
+def _grouped_q(q, kv):
+    b, _, h, hd = q.shape
+    return q[:, 0].reshape(b, kv, h // kv, hd)
+
+
+@pytest.mark.parametrize("kv,g", [(4, 1), (2, 2), (1, 4)])  # MHA → 4-way GQA
+@pytest.mark.parametrize("t", [64, 200, 320])
+def test_decode_kernel_vs_blocked_vs_dense(kv, g, t):
+    """All three decode paths agree across GQA group sizes and ragged
+    per-row pos, including the pos=0 and pos=T−1 boundaries."""
+    b, hd = 4, 16
+    q, k, v = _case(b, t, kv, g, hd, seed=kv * 10 + t)
+    pos = jnp.asarray([0, 1, t // 2, t - 1], jnp.int32)
+    qg = _grouped_q(q, kv)
+    dense = decode_attention_ref(qg, k, v, pos)
+    blocked = decode_attention_blocked(qg, k, v, pos, block=64)
+    kern = ops.decode_attention(q, k, v, pos=pos, chunk=64,
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(dense),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(kern).reshape(b, kv, g, hd), np.asarray(dense),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_decode_batch1_matches_packed_rows():
+    """Each packed row equals its own batch-1 decode — pack membership
+    never leaks across rows."""
+    b, t, kv, g, hd = 3, 128, 2, 2, 16
+    q, k, v = _case(b, t, kv, g, hd, seed=7)
+    pos = jnp.asarray([5, 63, 127], jnp.int32)
+    packed = ops.decode_attention(q, k, v, pos=pos, interpret=True)
+    for i in range(b):
+        solo = ops.decode_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                    pos=pos[i:i + 1], interpret=True)
+        np.testing.assert_array_equal(np.asarray(packed[i]),
+                                      np.asarray(solo[0]))
+
+
+@pytest.mark.parametrize("cap_small,cap_big", [(320, 1024), (256, 2048)])
+def test_decode_output_bit_invariant_to_padded_capacity(cap_small, cap_big):
+    """The load-bearing merged-pack property: growing a row's padded
+    capacity changes neither the kernel nor the blocked output by a single
+    bit (tiles past pos are skipped; masked tails contribute exact
+    zeros)."""
+    b, kv, g, hd = 2, 2, 2, 16
+    q, k, v = _case(b, cap_small, kv, g, hd, seed=3)
+    pos = jnp.asarray([17, cap_small - 1], jnp.int32)
+    k_big = jnp.zeros((b, cap_big, kv, hd)).at[:, :cap_small].set(k)
+    v_big = jnp.zeros((b, cap_big, kv, hd)).at[:, :cap_small].set(v)
+    qg = _grouped_q(q, kv)
+    np.testing.assert_array_equal(
+        np.asarray(decode_attention_blocked(qg, k, v, pos)),
+        np.asarray(decode_attention_blocked(qg, k_big, v_big, pos)))
+    np.testing.assert_array_equal(
+        np.asarray(ops.decode_attention(q, k, v, pos=pos, interpret=True)),
+        np.asarray(ops.decode_attention(q, k_big, v_big, pos=pos,
+                                        interpret=True)))
+
+
+def test_pos_is_runtime_not_compile_time():
+    """One jitted executable serves every ragged pos vector of a padded
+    shape — pos rides in SMEM, not in the compile key."""
+    s, rows, hd, cap = 2, 8, 16, 128
+    q = jnp.asarray(_rand((s, rows, hd), np.float32, 40))
+    k = jnp.asarray(_rand((s, cap, hd), np.float32, 41))
+    v = jnp.asarray(_rand((s, cap, hd), np.float32, 42))
+    traces = []
+
+    @jax.jit
+    def run(q, k, v, pos):
+        traces.append(1)
+        return decode_attention_streams(q, k, v, pos=pos, chunk=32,
+                                        interpret=True)
+
+    for pos in ([0, 0], [5, 100], [127, 64]):
+        pv = jnp.asarray(pos, jnp.int32)
+        out = run(q, k, v, pv)
+        # streams map to (B, KV=1, G=rows) for the dense oracle
+        ref = decode_attention_ref(q[:, None], k[:, :, None], v[:, :, None],
+                                   pv)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref[:, 0]),
+                                   rtol=1e-4, atol=1e-5)
+    assert len(traces) == 1, "pos must not trigger retraces"
+
+
+def test_write_kv_inserts_at_pos():
+    """write_kv == the legacy per-row dynamic_update_slice insert."""
+    b, t, kv, hd = 2, 16, 2, 8
+    ck = jnp.asarray(_rand((b, t, kv, hd), np.float32, 50))
+    cv = jnp.asarray(_rand((b, t, kv, hd), np.float32, 51))
+    kn = jnp.asarray(_rand((b, 1, kv, hd), np.float32, 52))
+    vn = jnp.asarray(_rand((b, 1, kv, hd), np.float32, 53))
+    pos = jnp.asarray([0, 9], jnp.int32)
+    nk, nv = ops.write_kv(ck, cv, kn, vn, pos)
+    for i, p in enumerate([0, 9]):
+        np.testing.assert_array_equal(np.asarray(nk[i, p]),
+                                      np.asarray(kn[i, 0]))
+        np.testing.assert_array_equal(np.asarray(nv[i, p]),
+                                      np.asarray(vn[i, 0]))
+        keep = [j for j in range(t) if j != p]
+        np.testing.assert_array_equal(np.asarray(nk[i, keep]),
+                                      np.asarray(ck[i, keep]))
+
+
+# ---------------------------------------------------------------------------
+# routed model path: REPRO_DECODE_KERNEL matrix over attn.decode_attention
+# ---------------------------------------------------------------------------
+
+def _legacy_decode_attention(p, x, cache_k, cache_v, pos, *, theta):
+    """Verbatim copy of the pre-kernel models/attention.py decode path —
+    the bit-identity oracle for REPRO_DECODE_KERNEL=0."""
+    from repro.models.attention import (
+        NEG_INF, _grouped, _project_qkv, proj_out)
+
+    b = x.shape[0]
+    t, kv = cache_k.shape[1], cache_k.shape[2]
+    q, k_new, v_new = _project_qkv(p, x, x, pos[:, None], pos[:, None], theta)
+    cache_k = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+        c, n, (i, 0, 0)))(cache_k, k_new, pos)
+    cache_v = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+        c, n, (i, 0, 0)))(cache_v, v_new, pos)
+    h = q.shape[2]
+    qg = _grouped(q, kv)[:, 0].astype(jnp.float32)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg, cache_k.astype(jnp.float32))
+    sc = sc * (q.shape[-1] ** -0.5)
+    valid = jnp.arange(t)[None] <= pos[:, None]
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    prob = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", prob, cache_v.astype(jnp.float32))
+    out = out.reshape(b, 1, h, q.shape[-1]).astype(x.dtype)
+    return proj_out(out, p.wo), (cache_k, cache_v)
+
+
+def _attn_fixture(seed=60):
+    from repro.models.attention import AttnParams
+
+    b, t, kv, h, d, hd = 2, 96, 2, 4, 32, 16
+    r = np.random.default_rng(seed)
+    sd = 0.1
+    p = AttnParams(
+        wq=jnp.asarray(r.standard_normal((d, h, hd)) * sd, jnp.float32),
+        wk=jnp.asarray(r.standard_normal((d, kv, hd)) * sd, jnp.float32),
+        wv=jnp.asarray(r.standard_normal((d, kv, hd)) * sd, jnp.float32),
+        wo=jnp.asarray(r.standard_normal((h, hd, d)) * sd, jnp.float32),
+    )
+    x = jnp.asarray(r.standard_normal((b, 1, d)), jnp.float32)
+    ck = jnp.asarray(r.standard_normal((b, t, kv, hd)), jnp.float32)
+    cv = jnp.asarray(r.standard_normal((b, t, kv, hd)), jnp.float32)
+    pos = jnp.asarray([0, 57], jnp.int32)
+    return p, x, ck, cv, pos
+
+
+def test_model_decode_mode_matrix(monkeypatch):
+    """attn.decode_attention under REPRO_DECODE_KERNEL=0 is bit-identical
+    to the pre-kernel path; 1 and blocked agree within fp32 reduction
+    eps (documented: ~1e-6 relative on the attention output)."""
+    from repro.models import attention as attn
+
+    p, x, ck, cv, pos = _attn_fixture()
+    legacy_out, (legacy_k, legacy_v) = _legacy_decode_attention(
+        p, x, ck, cv, pos, theta=1e4)
+
+    results = {}
+    for env in ("0", "blocked", "1"):
+        monkeypatch.setenv("REPRO_DECODE_KERNEL", env)
+        out, (nk, nv) = attn.decode_attention(p, x, ck, cv, pos, theta=1e4)
+        results[env] = out
+        # the K/V write is shared verbatim by every mode
+        np.testing.assert_array_equal(np.asarray(nk), np.asarray(legacy_k))
+        np.testing.assert_array_equal(np.asarray(nv), np.asarray(legacy_v))
+    np.testing.assert_array_equal(np.asarray(results["0"]),
+                                  np.asarray(legacy_out))
+    for env in ("blocked", "1"):
+        np.testing.assert_allclose(np.asarray(results[env]),
+                                   np.asarray(legacy_out),
+                                   rtol=1e-4, atol=1e-5)

@@ -82,3 +82,39 @@ def test_vmem_budget_guard():
     with pytest.raises(ValueError):
         lg_ops.logreg_sgd(np.zeros((200_000, 128), np.float32),
                           np.zeros(200_000, np.float32), batch=64)
+
+
+# ---------------------------------------------------------------------------
+# shared env routing: the REPRO_{NAME}_KERNEL matrix, tested once centrally
+# ---------------------------------------------------------------------------
+
+def test_kernel_mode_matrix(monkeypatch):
+    """auto/1/0 (+ aliases) resolve identically for all three routed
+    kernels via the shared kernel_mode helper; auto follows the backend."""
+    import jax
+
+    from repro.kernels.common import (
+        decode_kernel_mode, extend_kernel_mode, quant_kernel_mode)
+
+    on_tpu = jax.default_backend() == "tpu"
+    cases = [
+        ("EXTEND", extend_kernel_mode, "jax", ("blocked",), "jax"),
+        ("QUANT", quant_kernel_mode, "ref", ("jax",), "ref"),
+        ("DECODE", decode_kernel_mode, "dense", (), "blocked"),
+    ]
+    for name, fn, off, aliases, cpu_auto in cases:
+        var = f"REPRO_{name}_KERNEL"
+        for env in ("1", "on", "true", "kernel", " 1 ", "KERNEL"):
+            monkeypatch.setenv(var, env)
+            assert fn() == "kernel", (name, env)
+        for env in ("0", "off", "false", off) + aliases:
+            monkeypatch.setenv(var, env)
+            assert fn() == off, (name, env)
+        for env in ("auto", "", "bogus"):
+            monkeypatch.setenv(var, env)
+            assert fn() == ("kernel" if on_tpu else cpu_auto), (name, env)
+        monkeypatch.delenv(var)
+        assert fn() == ("kernel" if on_tpu else cpu_auto), (name, "unset")
+    # decode's intermediate path is selectable by name on any backend
+    monkeypatch.setenv("REPRO_DECODE_KERNEL", "blocked")
+    assert decode_kernel_mode() == "blocked"

@@ -396,13 +396,16 @@ def test_forced_join_makes_progress_when_only_cold(setup):
 
 
 def test_capacity_keeps_warm_decode_groups_separate(setup):
-    """A long session joining mid-stream must not drag short sessions'
-    packs up to its capacity — groups split by bucketed KV capacity."""
+    """Under capacity-split grouping (the dense-path policy, forced here
+    via merge_decode_packs=False) a long session joining mid-stream must
+    not drag short sessions' packs up to its capacity — groups split by
+    bucketed KV capacity."""
     cfg, model, params, doc_a, doc_b = setup
     # sync mode so all three sessions are decodable on the first step
     # (grouping is identical in both modes)
     mgr = SessionManager(model, params, chunk_tokens=32, decode_bucket=32,
-                         max_batch=8, async_prefill=False)
+                         max_batch=8, async_prefill=False,
+                         merge_decode_packs=False)
     s1 = mgr.add_session(doc_a)
     s2 = mgr.add_session(doc_a)
     long = mgr.add_session(doc_b)
@@ -416,6 +419,42 @@ def test_capacity_keeps_warm_decode_groups_separate(setup):
     assert cache_len(mgr._packs[(s1, s2)]) < cache_len(mgr._packs[(long,)])
     out = mgr.run()
     assert len(out[s1]) == len(out[s2]) == len(out[long]) == 4
+
+
+def test_merged_ragged_packs_stream_identically_to_split(setup):
+    """Merged mixed-capacity packs (the ragged-decode default) coalesce
+    short and long sessions into one pack — and every token matches the
+    capacity-split schedule bit-for-bit (masked tail contributions of the
+    blocked/kernel decode paths are exact zeros, so a row's output is
+    invariant to its pack's padded capacity)."""
+    cfg, model, params, doc_a, doc_b = setup
+
+    def run(merge):
+        mgr = SessionManager(model, params, chunk_tokens=32,
+                             decode_bucket=32, max_batch=8,
+                             async_prefill=False,
+                             merge_decode_packs=merge)
+        s1 = mgr.add_session(doc_a)
+        s2 = mgr.add_session(doc_a)
+        long = mgr.add_session(doc_b)
+        mgr.submit(s1, 64, 4)
+        mgr.submit(s2, 64, 4)
+        mgr.submit(long, 160, 4)
+        mgr.step()
+        groups = list(mgr._packs)
+        out = mgr.run()
+        return groups, [out[s] for s in (s1, s2, long)], mgr
+
+    merged_groups, merged_out, merged_mgr = run(True)
+    split_groups, split_out, _ = run(False)
+    # one pack for all three, largest capacity first (tiered row order)
+    assert (2, 0, 1) in merged_groups
+    assert (0, 1) in split_groups and (2,) in split_groups
+    assert merged_out == split_out              # token-identical streams
+    # the merged round pads the short rows, so occupancy is reported < 1
+    rep = merged_mgr.report()
+    assert 0.0 < rep["decode_padded_frac"] < 1.0
+    assert rep["decode_attn_flops"] > 0.0
 
 
 def test_idle_server_report_is_finite(setup):
